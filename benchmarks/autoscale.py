@@ -1,0 +1,64 @@
+"""Autoscaling trace benchmark (paper §3.3): bursty open-loop load against
+one instance; the queue-time rule (>5 s sustained 30 s) must fire, the Job
+Worker must converge, and post-scale queue time must drop."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro import configs
+from repro.config import GPU_L40S
+from repro.core.controller import ClusterSpec, ControlPlane
+from repro.data.burstgpt import bursty_poisson
+
+MODEL = "mistral-small-24b"
+
+
+def run(duration: float = 420.0, rate: float = 5.0, seed: int = 0) -> dict:
+    from repro.engine.engine import LLMEngine
+    from repro.engine.executor import SimExecutor
+
+    spec = ClusterSpec(num_nodes=6, gpus_per_node=2, hardware=GPU_L40S,
+                       max_num_seqs=8, num_blocks=512, block_size=16,
+                       max_model_len=8192, max_instances=6)
+
+    def factory(cfg, tp):
+        ex = SimExecutor(cfg, GPU_L40S, tp=2, efficiency=0.5)
+        return LLMEngine(cfg, ex, num_blocks=spec.num_blocks,
+                         block_size=spec.block_size,
+                         max_num_seqs=spec.max_num_seqs,
+                         max_prefill_tokens=2048,
+                         max_model_len=spec.max_model_len)
+
+    cp = ControlPlane(spec, engine_factory=factory)
+    cp.add_tenant("bench", "sk-bench")
+    cp.add_model(configs.get(MODEL), instances=1, gpus_per_node=2,
+                 est_load_time=45.0)
+    cp.run_until(90.0)
+    t0 = cp.loop.now
+
+    wl = bursty_poisson(rate, duration, seed=seed)
+    for req, at in zip(wl.requests, wl.arrivals):
+        cp.loop.call_at(t0 + at,
+                        lambda r=req: cp.web_gateway.handle("sk-bench",
+                                                            MODEL, r))
+    cp.run_until(t0 + duration + 240.0)
+
+    series = cp.metrics_gateway.history.get(1, [])
+    qt = [(t - t0, m["queue_time_max"]) for t, m in series]
+    peak_before = max((v for t, v in qt
+                       if not cp.metrics_gateway.scale_events
+                       or t <= cp.metrics_gateway.scale_events[0][0] - t0),
+                      default=0.0)
+    tail = [v for t, v in qt if t > duration]
+    finished = sum(1 for r in wl.requests if r.status.value == "finished")
+    return {
+        "requests": len(wl.requests),
+        "finished": finished,
+        "scale_events": len(cp.metrics_gateway.scale_events),
+        "first_scale_at_s": (cp.metrics_gateway.scale_events[0][0] - t0
+                             if cp.metrics_gateway.scale_events else None),
+        "final_instances": len(cp.ready_endpoints(MODEL)),
+        "queue_time_peak_s": max((v for _, v in qt), default=0.0),
+        "queue_time_peak_before_scale_s": peak_before,
+        "queue_time_tail_s": float(np.mean(tail)) if tail else 0.0,
+    }

@@ -1,0 +1,30 @@
+"""Gateway-overhead decomposition (the paper's ~500 ms claim).
+
+Runs the same workload direct-to-node and through the Web Gateway and
+reports per-metric deltas, plus the analytic decomposition of gateway
+latency (auth cache/db, endpoint lookup, forward hop, streaming return)."""
+from __future__ import annotations
+
+from repro.core.web_gateway import GatewayLatency
+
+from benchmarks.table1 import run_scenario
+
+
+def run(n: int = 500, node: str = "GPU-L", seed: int = 0) -> dict:
+    direct = run_scenario(node, "direct", n, seed=seed)
+    gateway = run_scenario(node, "gateway", n, seed=seed)
+    lat = GatewayLatency()
+    return {
+        "concurrency": n,
+        "node": node,
+        "delta_e2el_ms": gateway["e2el_median_ms"] - direct["e2el_median_ms"],
+        "delta_ttft_ms": gateway["ttft_median_ms"] - direct["ttft_median_ms"],
+        "delta_tpot_ms": gateway["tpot_median_ms"] - direct["tpot_median_ms"],
+        "direct_e2el_ms": direct["e2el_median_ms"],
+        "gateway_e2el_ms": gateway["e2el_median_ms"],
+        # analytic per-request additions (cache-hit steady state)
+        "analytic_request_path_ms": 1e3 * (lat.auth_cache_hit
+                                           + lat.endpoint_db_trip
+                                           + lat.forward_hop),
+        "analytic_response_hop_ms": 1e3 * lat.response_hop,
+    }

@@ -1,0 +1,83 @@
+"""Shared benchmark plumbing: client-side metric recording + percentile
+summaries in the paper's Table-1 format."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+
+@dataclass
+class ClientRecord:
+    t_submit: float
+    t_first: Optional[float] = None
+    t_last: Optional[float] = None
+    n_tokens: int = 0
+
+    @property
+    def ttft(self):
+        return None if self.t_first is None else self.t_first - self.t_submit
+
+    @property
+    def e2el(self):
+        return None if self.t_last is None else self.t_last - self.t_submit
+
+    @property
+    def tpot(self):
+        if self.t_last is None or self.n_tokens <= 1:
+            return None
+        return (self.t_last - self.t_first) / (self.n_tokens - 1)
+
+
+class ClientRecorder:
+    """Attaches to Request.on_token; measures what the vLLM serve-benchmark
+    measures, at the client side (streaming)."""
+
+    def __init__(self):
+        self.records: dict[int, ClientRecord] = {}
+
+    def submit(self, req, now: float):
+        self.records[req.request_id] = ClientRecord(t_submit=now)
+        rec = self.records[req.request_id]
+
+        def on_token(r, tok, t):
+            if rec.t_first is None:
+                rec.t_first = t
+            rec.t_last = t
+            rec.n_tokens += 1
+
+        req.on_token = on_token
+
+    # ------------------------------------------------------------------
+    def summary(self) -> dict:
+        recs = [r for r in self.records.values() if r.t_last is not None]
+        if not recs:
+            return {"completed": 0}
+        e2el = np.array([r.e2el for r in recs])
+        ttft = np.array([r.ttft for r in recs])
+        tpot = np.array([r.tpot for r in recs if r.tpot is not None])
+        out_tokens = sum(r.n_tokens for r in recs)
+        t_end = max(r.t_last for r in recs)
+        t_start = min(r.t_submit for r in recs)
+        dur = t_end - t_start
+        return {
+            "completed": len(recs),
+            "duration_s": dur,
+            "e2el_median_ms": float(np.median(e2el) * 1e3),
+            "e2el_std_ms": float(np.std(e2el) * 1e3),
+            "ttft_median_ms": float(np.median(ttft) * 1e3),
+            "ttft_std_ms": float(np.std(ttft) * 1e3),
+            "tpot_median_ms": float(np.median(tpot) * 1e3) if len(tpot) else 0,
+            "tpot_std_ms": float(np.std(tpot) * 1e3) if len(tpot) else 0,
+            "throughput_req_s": len(recs) / dur if dur else 0,
+            "throughput_out_tok_s": out_tokens / dur if dur else 0,
+            "total_output_tokens": out_tokens,
+        }
+
+
+def merge_runs(summaries: list[dict]) -> dict:
+    """Average metric dicts across seeds (the paper averages 50 runs)."""
+    keys = [k for k in summaries[0] if isinstance(summaries[0][k],
+                                                  (int, float))]
+    return {k: float(np.mean([s[k] for s in summaries])) for k in keys}

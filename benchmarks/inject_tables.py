@@ -1,0 +1,46 @@
+"""Regenerate the §Roofline tables inside EXPERIMENTS.md from the current
+results/dryrun artifacts (idempotent; replaces the marker block)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks import roofline
+
+ROOT = Path(__file__).resolve().parents[1]
+MARK = "<!-- ROOFLINE-TABLES -->"
+
+
+def build() -> str:
+    out = [MARK, ""]
+    for mesh in ("single", "multi"):
+        rows = roofline.load(mesh)
+        ok = [r for r in rows if r["status"] == "ok"]
+        skipped = [r for r in rows if r["status"] == "skipped"]
+        errors = [r for r in rows if r["status"] == "error"]
+        out.append(roofline.table(mesh))
+        out.append("")
+        out.append(f"({len(ok)} compiled, {len(skipped)} skipped "
+                   f"(long_500k × full-attention), {len(errors)} errors; "
+                   f"{40 - len(rows)} cells still compiling when this "
+                   f"snapshot was taken)" if len(rows) < 40 else
+                   f"({len(ok)} compiled, {len(skipped)} skipped "
+                   f"(long_500k × full-attention), {len(errors)} errors)")
+        out.append("")
+        s = roofline.summary(mesh)
+        out.append(f"Summary ({mesh}): {json.dumps(s, default=str)}")
+        out.append("")
+    return "\n".join(out)
+
+
+def main():
+    p = ROOT / "EXPERIMENTS.md"
+    text = p.read_text()
+    pre = text.split(MARK)[0]
+    post = text.split("## §Perf")[1]
+    p.write_text(pre + build() + "\n## §Perf" + post)
+    print("EXPERIMENTS.md §Roofline refreshed")
+
+
+if __name__ == "__main__":
+    main()

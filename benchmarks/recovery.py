@@ -1,0 +1,61 @@
+"""Fault-tolerance benchmark: kill a node mid-load, measure the control
+plane's detection latency (Endpoint Worker), reconvergence time (Job Worker
++ Slurm + weight load) and request loss."""
+from __future__ import annotations
+
+from repro import configs
+from repro.config import GPU_H100
+from repro.core.controller import ClusterSpec, ControlPlane
+from repro.data.burstgpt import bursty_poisson
+
+MODEL = "mistral-small-24b"
+
+
+def run(seed: int = 0) -> dict:
+    spec = ClusterSpec(num_nodes=4, gpus_per_node=1, hardware=GPU_H100,
+                       max_num_seqs=32, num_blocks=2048, block_size=16,
+                       endpoint_worker_interval=5.0,
+                       job_worker_interval=15.0)
+    cp = ControlPlane(spec)
+    cp.add_tenant("bench", "sk-bench")
+    cp.add_model(configs.get(MODEL), instances=2, gpus_per_node=1,
+                 est_load_time=45.0)
+    cp.run_until(150.0)
+    assert len(cp.ready_endpoints(MODEL)) == 2
+
+    wl = bursty_poisson(3.0, 300.0, seed=seed)
+    t0 = cp.loop.now
+    for req, at in zip(wl.requests, wl.arrivals):
+        cp.loop.call_at(t0 + at,
+                        lambda r=req: cp.web_gateway.handle("sk-bench",
+                                                            MODEL, r))
+    # kill the node hosting the first endpoint at t0+60
+    victim = cp.ready_endpoints(MODEL)[0]["node"]
+    t_kill = t0 + 60.0
+
+    cp.loop.call_at(t_kill, lambda: cp.slurm.fail_node(victim))
+    # observe when the dead endpoint's rows disappear and when a replacement
+    # becomes ready again
+    detect, recover = [], []
+
+    def watch():
+        eps = cp.ready_endpoints(MODEL)
+        nodes = {e["node"] for e in eps}
+        if cp.loop.now > t_kill and victim not in nodes and not detect:
+            detect.append(cp.loop.now)
+        if detect and len(eps) >= 2 and not recover:
+            recover.append(cp.loop.now)
+
+    cp.loop.every(1.0, lambda now: watch())
+    cp.run_until(t0 + 500.0)
+
+    failed = sum(1 for r in wl.requests if r.status.value == "failed")
+    finished = sum(1 for r in wl.requests if r.status.value == "finished")
+    return {
+        "requests": len(wl.requests),
+        "finished": finished,
+        "failed_in_flight": failed,
+        "detect_latency_s": (detect[0] - t_kill) if detect else None,
+        "recovery_latency_s": (recover[0] - t_kill) if recover else None,
+        "final_ready": len(cp.ready_endpoints(MODEL)),
+    }

@@ -1,0 +1,83 @@
+"""§Roofline report: aggregate the dry-run JSONs into the per-(arch × shape
+× mesh) table with the three terms, dominant bottleneck, MODEL_FLOPS ratio
+and fit verdicts. Markdown to stdout / returned rows for run.py."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str = "single") -> list[dict]:
+    rows = []
+    d = RESULTS / mesh
+    if not d.exists():
+        return rows
+    for f in sorted(d.glob("*.json")):
+        r = json.loads(f.read_text())
+        arch, shape = f.stem.split("__")
+        r.setdefault("arch", arch)
+        r.setdefault("shape", shape)
+        rows.append(r)
+    rows.sort(key=lambda r: (r.get("arch", r.get("error", "")),
+                             SHAPE_ORDER.index(r["shape"])
+                             if r.get("shape") in SHAPE_ORDER else 9))
+    return rows
+
+
+def table(mesh: str = "single") -> str:
+    rows = load(mesh)
+    out = [f"### Roofline — {mesh} mesh "
+           f"({'256' if mesh == 'single' else '512'} chips, TPU v5e)",
+           "",
+           "| arch | shape | t_compute (s) | t_memory (s) | t_coll (s) | "
+           "dominant | useful/HLO | GB/dev | fits |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] == "skipped":
+            continue
+        if r["status"] == "error":
+            out.append(f"| {r.get('arch')} | {r.get('shape')} | ERROR: "
+                       f"{r.get('error', '')[:60]} | | | | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']:.4f} | "
+            f"{r['t_memory']:.4f} | {r['t_collective']:.4f} | "
+            f"{r['dominant']} | {r['useful_flops_ratio']:.3f} | "
+            f"{r['bytes_per_device'] / 1e9:.2f} | "
+            f"{'yes' if r['fits_v5e_hbm'] else 'NO'} |")
+    skipped = [r for r in rows if r["status"] == "skipped"]
+    if skipped:
+        out.append("")
+        out.append("Skipped cells (long_500k × full-attention archs, per "
+                   "assignment): "
+                   + ", ".join(sorted(r["arch"] for r in skipped)))
+    return "\n".join(out)
+
+
+def summary(mesh: str = "single") -> dict:
+    rows = [r for r in load(mesh) if r["status"] == "ok"]
+    if not rows:
+        return {"cells": 0}
+    worst = min(rows, key=lambda r: r["useful_flops_ratio"])
+    most_coll = max(rows, key=lambda r: r["t_collective"]
+                    / max(r["step_time_est"], 1e-12))
+    return {
+        "cells": len(rows),
+        "compiled_ok": len(rows),
+        "worst_useful_ratio": (worst["arch"], worst["shape"],
+                               round(worst["useful_flops_ratio"], 4)),
+        "most_collective_bound": (most_coll["arch"], most_coll["shape"]),
+        "dominants": {d: sum(1 for r in rows if r["dominant"] == d)
+                      for d in ("compute", "memory", "collective")},
+    }
+
+
+if __name__ == "__main__":
+    for mesh in ("single", "multi"):
+        print(table(mesh))
+        print()
+        print(json.dumps(summary(mesh), indent=1))

@@ -1,0 +1,99 @@
+"""Benchmark entry point — one section per paper table/figure.
+
+  table1            Table 1: E2EL/TTFT/TPOT × concurrency × direct/gateway
+  gateway_overhead  the ~500 ms gateway-overhead claim, decomposed
+  autoscale         §3.3 queue-time rule firing + convergence
+  recovery          node-failure detection/recovery (FT posture)
+  kernels           paged-attention / flash-prefill microbenches
+  roofline          §Roofline summary from the dry-run artifacts
+
+Prints ``name,us_per_call,derived`` CSV lines at the end as the harness
+contract, plus human-readable sections.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: table1,autoscale,gateway,recovery,"
+                         "kernels,roofline")
+    ap.add_argument("--runs", type=int, default=2)
+    ap.add_argument("--concurrencies", default="100,500,1000")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    csv: list[tuple] = []
+
+    def want(name):
+        return only is None or name in only
+
+    if want("table1"):
+        from benchmarks import table1
+        print("\n=== Table 1: concurrency benchmark "
+              "(median over runs; paper values in EXPERIMENTS.md) ===")
+        rows = table1.run(runs=args.runs,
+                          concurrencies=tuple(
+                              int(c) for c in args.concurrencies.split(",")))
+        for r in rows:
+            csv.append((f"table1/{r['node']}/{r['mode']}/{r['concurrency']}",
+                        r["e2el_median_ms"] * 1e3,
+                        f"ttft_ms={r['ttft_median_ms']:.1f};"
+                        f"tpot_ms={r['tpot_median_ms']:.2f};"
+                        f"req_s={r['throughput_req_s']:.2f}"))
+
+    if want("gateway") or want("gateway_overhead"):
+        from benchmarks import gateway_overhead
+        print("\n=== Gateway overhead ===")
+        r = gateway_overhead.run(n=500)
+        print(json.dumps(r, indent=1))
+        csv.append(("gateway_overhead/e2el_delta", r["delta_e2el_ms"] * 1e3,
+                    f"ttft_delta_ms={r['delta_ttft_ms']:.1f}"))
+
+    if want("autoscale"):
+        from benchmarks import autoscale
+        print("\n=== Autoscaling (queue_time>5s for 30s -> +1 instance) ===")
+        r = autoscale.run()
+        print(json.dumps(r, indent=1))
+        csv.append(("autoscale/first_scale_at",
+                    (r["first_scale_at_s"] or 0) * 1e6,
+                    f"events={r['scale_events']};"
+                    f"final_instances={r['final_instances']}"))
+
+    if want("recovery"):
+        from benchmarks import recovery
+        print("\n=== Node-failure recovery ===")
+        r = recovery.run()
+        print(json.dumps(r, indent=1))
+        csv.append(("recovery/detect", (r["detect_latency_s"] or 0) * 1e6,
+                    f"recover_s={r['recovery_latency_s']}"))
+
+    if want("kernels"):
+        from benchmarks import kernels
+        print("\n=== Kernel microbenchmarks ===")
+        for r in kernels.run():
+            print(json.dumps(r, indent=1))
+            csv.append((f"kernels/{r['name']}", r["cpu_ref_wall_us"],
+                        f"tpu_roofline_us={r['tpu_roofline_us']:.1f};"
+                        f"bound={r['bound']}"))
+
+    if want("roofline"):
+        from benchmarks import roofline
+        print("\n=== Roofline (from dry-run artifacts) ===")
+        for mesh in ("single", "multi"):
+            s = roofline.summary(mesh)
+            print(mesh, json.dumps(s, indent=1, default=str))
+            if s.get("cells"):
+                csv.append((f"roofline/{mesh}/cells", s["cells"],
+                            f"dominants={s['dominants']}"))
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in csv:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Autoscaling serving cluster (paper §3.3 end-to-end, virtual clock).
+
+A bursty diurnal-ish load hits one Mistral-24B instance; the Grafana rule
+(queue time > 5 s sustained 30 s) fires, the Job Worker spins up more Slurm
+jobs, load drains; when the burst passes, the idle scale-down rule returns
+capacity to the research partition (the paper's off-hours goal).
+
+    PYTHONPATH=src python examples/serve_cluster.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro import configs
+from repro.config import GPU_L40S
+from repro.core.controller import ClusterSpec, ControlPlane
+from repro.core.autoscaler import AlertRule
+from repro.data.burstgpt import bursty_poisson
+
+MODEL = "mistral-small-24b"
+
+
+def main():
+    rules = [
+        AlertRule("queue_time>5s_for_30s", "queue_time_max", "gt", 5.0,
+                  30.0, +1, cooldown=60.0),
+        AlertRule("idle_scale_down", "kv_util_avg", "lt", 0.02, 120.0, -1,
+                  cooldown=120.0),
+    ]
+    spec = ClusterSpec(num_nodes=8, gpus_per_node=2, hardware=GPU_L40S,
+                       max_num_seqs=8, num_blocks=512, block_size=16,
+                       max_model_len=8192, max_instances=6)
+    cp = ControlPlane(spec, alert_rules=rules)
+    cp.add_tenant("uni", "sk-cluster")
+    cp.add_model(configs.get(MODEL), instances=1, gpus_per_node=2,
+                 est_load_time=45.0)
+    cp.run_until(90.0)
+    t0 = cp.loop.now
+
+    # 6-minute burst at ~6 req/s, then quiet for scale-down
+    wl = bursty_poisson(rate=6.0, duration=360.0, seed=0)
+    for req, at in zip(wl.requests, wl.arrivals):
+        cp.loop.call_at(t0 + at,
+                        lambda r=req: cp.web_gateway.handle(
+                            "sk-cluster", MODEL, r))
+
+    for minute in range(16):
+        cp.run_until(t0 + 60.0 * (minute + 1))
+        eps = len(cp.ready_endpoints(MODEL))
+        hist = cp.metrics_gateway.history.get(1, [])
+        qt = hist[-1][1]["queue_time_max"] if hist else 0.0
+        util = cp.slurm.utilization()
+        fin = sum(1 for r in wl.requests if r.status.value == "finished")
+        print(f"t={minute + 1:3d}min  instances={eps}  queue_time={qt:7.1f}s"
+              f"  slurm_gpu_util={util:.2f}  finished={fin}/{len(wl.requests)}")
+
+    print("\nscale events:")
+    for t, cfg_id, delta, rule in cp.metrics_gateway.scale_events:
+        print(f"  t={t - t0:7.1f}s  config {cfg_id}  {delta:+d}  ({rule})")
+    fin = sum(1 for r in wl.requests if r.status.value == "finished")
+    print(f"\nfinished {fin}/{len(wl.requests)} requests; "
+          f"final instances: {len(cp.ready_endpoints(MODEL))}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,143 @@
+"""Control-plane assembly: the full two-layer architecture of the paper.
+
+Layer 1 (Kubernetes microservices): Web Gateway, Job Worker, Slurm Submit,
+Endpoint Gateway, Endpoint Worker, Metrics Gateway, Autoscaler, central DB.
+Layer 2 (Slurm jobs): vLLM engine instances spawned on simulated HPC nodes.
+
+The engine executor is injectable: SimExecutor (roofline timing, used by the
+Table-1 benchmarks) or RealExecutor (actual JAX compute, used in tests and
+examples with reduced configs).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from repro.config import GPU_H100, HardwareConfig, ModelConfig
+from repro.core.autoscaler import Autoscaler, AlertRule
+from repro.core.db import Database
+from repro.core.instance import VLLMInstance
+from repro.core.metrics_gateway import MetricsGateway
+from repro.core.services import (EndpointGateway, EndpointWorker, JobWorker,
+                                 SlurmSubmit)
+from repro.core.simclock import EventLoop
+from repro.core.slurm import SimNode, SimSlurm
+from repro.core.web_gateway import WebGateway
+from repro.engine.engine import LLMEngine
+from repro.engine.executor import SimExecutor
+
+
+@dataclass
+class ClusterSpec:
+    num_nodes: int = 8
+    gpus_per_node: int = 4
+    partition: str = "gpu"
+    hardware: HardwareConfig = GPU_H100
+    # service cycle times
+    job_worker_interval: float = 15.0     # paper: every 15 seconds
+    endpoint_worker_interval: float = 5.0
+    scrape_interval: float = 5.0
+    autoscaler_interval: float = 10.0
+    startup_timeout: float = 1800.0       # paper: 30 minutes
+    slurm_sched_interval: float = 2.0
+    # engine shape
+    num_blocks: int = 4096
+    block_size: int = 32
+    max_num_seqs: int = 64
+    max_prefill_tokens: int = 2048
+    max_model_len: int = 8192
+    max_instances: int = 8
+
+
+class ControlPlane:
+    def __init__(self, spec: ClusterSpec = None,
+                 engine_factory: Optional[Callable] = None,
+                 alert_rules: Optional[list[AlertRule]] = None):
+        self.spec = spec or ClusterSpec()
+        self.loop = EventLoop()
+        self.db = Database()
+        self.registry: dict[tuple, VLLMInstance] = {}
+        self.model_cfgs: dict[str, ModelConfig] = {}
+        self.instances_spawned: list[VLLMInstance] = []
+        self._engine_factory = engine_factory or self._default_engine
+
+        nodes = [SimNode(f"node{i:03d}", gpus=self.spec.gpus_per_node,
+                         partition=self.spec.partition)
+                 for i in range(self.spec.num_nodes)]
+        self.slurm = SimSlurm(self.loop, nodes,
+                              sched_interval=self.spec.slurm_sched_interval)
+        self.endpoint_gateway = EndpointGateway(self.db, self.loop)
+        self.slurm_submit = SlurmSubmit(self.slurm, self._job_payload)
+        self.job_worker = JobWorker(self.db, self.loop, self.slurm,
+                                    self.slurm_submit,
+                                    interval=self.spec.job_worker_interval)
+        self.endpoint_worker = EndpointWorker(
+            self.db, self.loop, self.slurm, self.registry,
+            interval=self.spec.endpoint_worker_interval,
+            startup_timeout=self.spec.startup_timeout)
+        self.metrics_gateway = MetricsGateway(
+            self.db, self.loop, self.registry,
+            scrape_interval=self.spec.scrape_interval,
+            max_instances=self.spec.max_instances)
+        self.autoscaler = Autoscaler(self.metrics_gateway, self.loop,
+                                     rules=alert_rules,
+                                     eval_interval=self.spec.autoscaler_interval)
+        self.web_gateway = WebGateway(self.db, self.loop, self.registry)
+
+    # ------------------------------------------------------------------
+    def add_tenant(self, name: str, api_key: str):
+        return self.db.create_tenant(name, api_key)
+
+    def add_model(self, cfg: ModelConfig, *, instances: int = 1,
+                  gpus_per_node: int = 1, nodes: int = 1,
+                  est_load_time: float = 120.0, version: str = "1",
+                  max_model_len: Optional[int] = None) -> dict:
+        self.model_cfgs[cfg.name] = cfg
+        return self.db["ai_model_configurations"].insert(
+            self.db, model_name=cfg.name, model_version=version,
+            instances=instances, gpus_per_node=gpus_per_node, nodes=nodes,
+            est_load_time=est_load_time,
+            max_model_len=max_model_len or self.spec.max_model_len,
+            slurm_partition=self.spec.partition)
+
+    # ------------------------------------------------------------------
+    def _default_engine(self, cfg: ModelConfig, tp: int) -> LLMEngine:
+        ex = SimExecutor(cfg, self.spec.hardware, tp=tp)
+        return LLMEngine(cfg, ex, num_blocks=self.spec.num_blocks,
+                         block_size=self.spec.block_size,
+                         max_num_seqs=self.spec.max_num_seqs,
+                         max_prefill_tokens=self.spec.max_prefill_tokens,
+                         max_model_len=self.spec.max_model_len)
+
+    def _job_payload(self, job, node, params: dict):
+        """The .slurm script body: register with the Endpoint Gateway (curl
+        POST), then start the vLLM server on the assigned port."""
+        port = self.endpoint_gateway.register(
+            endpoint_job_id=int(params["endpoint_job_id"]),
+            slurm_job_id=job.job_id, node=node.node_id,
+            model_name=params["model"], model_version=params["version"],
+            bearer_token=params["bearer"], auth="eg")
+        if port is None:
+            return lambda: None
+        cfg = self.model_cfgs[params["model"]]
+        engine = self._engine_factory(cfg, int(params.get("gpus", 1)))
+        inst = VLLMInstance(self.loop, engine, node=node.node_id, port=port,
+                            bearer_token=params["bearer"],
+                            model_name=cfg.name,
+                            load_time=float(params.get("load", 120.0)))
+        self.registry[(node.node_id, port)] = inst
+        self.instances_spawned.append(inst)
+
+        def kill():
+            inst.kill()
+            self.registry.pop((node.node_id, port), None)
+
+        return kill
+
+    # ------------------------------------------------------------------
+    def run_until(self, t: float):
+        self.loop.run_until(t)
+
+    def ready_endpoints(self, model_name: str) -> list[dict]:
+        return [ep for ep in self.db["ai_model_endpoints"].select(
+            model_name=model_name) if ep["ready_at"] is not None]

@@ -1,0 +1,87 @@
+"""A vLLM server instance inside a Slurm job (the paper's layer 2).
+
+Wraps an LLMEngine and self-schedules its step loop on the event loop:
+while there is work, steps run back-to-back, each consuming the model time
+given by the executor (roofline simulator or real JAX compute). `/health`
+returns 200 only once weight loading (est_load_time) has completed —
+exactly the signal the Endpoint Worker polls.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.simclock import EventLoop
+from repro.engine.engine import LLMEngine
+from repro.engine.request import Request, RequestStatus
+
+
+class VLLMInstance:
+    def __init__(self, loop: EventLoop, engine: LLMEngine, *, node: str,
+                 port: int, bearer_token: str, model_name: str,
+                 load_time: float = 120.0):
+        self.loop = loop
+        self.engine = engine
+        self.node = node
+        self.port = port
+        self.bearer_token = bearer_token
+        self.model_name = model_name
+        self.alive = True
+        self.loaded = False
+        self._stepping = False
+        loop.call_after(load_time, self._finish_load)
+
+    # -- lifecycle ---------------------------------------------------------
+    def _finish_load(self):
+        if self.alive:
+            self.loaded = True
+            self._kick()
+
+    def kill(self):
+        """Slurm job cancelled / node failed: in-flight requests are lost."""
+        self.alive = False
+        self.loaded = False
+        for seq in list(self.engine.scheduler.running):
+            self.engine.scheduler.finish_seq(seq, RequestStatus.FAILED)
+            self.engine.metrics.requests_failed += 1
+        for req in list(self.engine.scheduler.waiting):
+            req.status = RequestStatus.FAILED
+            self.engine.metrics.requests_failed += 1
+        self.engine.scheduler.waiting.clear()
+
+    # -- API surface ---------------------------------------------------------
+    def health(self) -> int:
+        """GET /health -> HTTP status."""
+        return 200 if (self.alive and self.loaded) else 503
+
+    def submit(self, req: Request, bearer: Optional[str] = None) -> int:
+        if not self.alive or not self.loaded:
+            return 503
+        if bearer is not None and bearer != self.bearer_token:
+            return 401
+        self.engine.add_request(req, self.loop.now)
+        self._kick()
+        return 200
+
+    def metrics_snapshot(self) -> dict:
+        return self.engine.snapshot(self.loop.now)
+
+    # -- step loop -----------------------------------------------------------
+    def _kick(self):
+        if self._stepping or not (self.alive and self.loaded):
+            return
+        self._stepping = True
+        self.loop.call_after(0.0, self._step)
+
+    def _step(self):
+        if not self.alive:
+            self._stepping = False
+            return
+        rep = self.engine.step(self.loop.now)
+        if rep.kind == "idle":
+            self._stepping = False
+            if self.engine.has_work():
+                # blocked (e.g. allocator pressure with nothing evictable):
+                # back off one scheduler tick rather than spinning
+                self.loop.call_after(0.05, self._kick)
+            return
+        self.loop.call_after(rep.elapsed, self._step)

@@ -1,0 +1,102 @@
+"""Metrics Gateway + observability stack (paper §3.2.5 / §3.3).
+
+Serves (a) Prometheus HTTP service discovery built from ai_model_endpoints
+(vLLM instances live outside the Kubernetes cluster and change addresses,
+hence this workaround), (b) the scrape loop itself (standing in for
+Prometheus), and (c) the Grafana-webhook endpoint whose payloads mutate the
+desired instance count in ai_model_configurations — the actuation half of
+the automated dynamic scaling mechanism.
+"""
+from __future__ import annotations
+
+from collections import defaultdict, deque
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core.db import Database
+from repro.core.simclock import EventLoop
+
+
+class MetricsGateway:
+    def __init__(self, db: Database, loop: EventLoop, registry: dict,
+                 scrape_interval: float = 5.0, history_window: float = 600.0,
+                 min_instances: int = 1, max_instances: int = 8):
+        self.db = db
+        self.loop = loop
+        self.registry = registry
+        self.history_window = history_window
+        self.min_instances = min_instances
+        self.max_instances = max_instances
+        # (config_id) -> deque[(t, aggregated metrics dict)]
+        self.history: dict[int, deque] = defaultdict(deque)
+        self.scale_events: list[tuple] = []   # (t, config_id, delta, reason)
+        loop.every(scrape_interval, self.scrape)
+
+    # -- Prometheus HTTP service discovery --------------------------------
+    def prometheus_targets(self) -> list[dict]:
+        out = []
+        for ep in self.db["ai_model_endpoints"].rows.values():
+            if ep["ready_at"] is None:
+                continue
+            job = self.db["ai_model_endpoint_jobs"].get(ep["endpoint_job_id"])
+            out.append({
+                "targets": [f"{ep['node']}:{ep['port']}"],
+                "labels": {
+                    "model": ep["model_name"],
+                    "model_version": str(ep["model_version"]),
+                    "endpoint_job_id": str(ep["endpoint_job_id"]),
+                    "slurm_job_id": str(job["slurm_job_id"]) if job else "",
+                    "__bearer__": ep["bearer_token"],
+                },
+            })
+        return out
+
+    # -- scrape loop (Prometheus stand-in) ---------------------------------
+    def scrape(self, now: float = None):
+        now = self.loop.now if now is None else now
+        per_config = defaultdict(list)
+        for target in self.prometheus_targets():
+            node, port = target["targets"][0].rsplit(":", 1)
+            inst = self.registry.get((node, int(port)))
+            if inst is None or not inst.alive:
+                continue
+            snap = inst.metrics_snapshot()
+            job = self.db["ai_model_endpoint_jobs"].get(
+                int(target["labels"]["endpoint_job_id"]))
+            if job is None:
+                continue
+            per_config[job["configuration_id"]].append(snap)
+        for cfg_id, snaps in per_config.items():
+            agg = {
+                "n": len(snaps),
+                "queue_time_max": max(s["queue_time"] for s in snaps),
+                "queue_time_min": min(s["queue_time"] for s in snaps),
+                "kv_util_avg": sum(s["kv_utilization"] for s in snaps)
+                / len(snaps),
+                "waiting_total": sum(s["num_waiting"] for s in snaps),
+                "running_total": sum(s["num_running"] for s in snaps),
+            }
+            h = self.history[cfg_id]
+            h.append((now, agg))
+            while h and h[0][0] < now - self.history_window:
+                h.popleft()
+
+    def series(self, config_id: int, metric: str, since: float) -> list[tuple]:
+        return [(t, m[metric]) for t, m in self.history[config_id]
+                if t >= since]
+
+    # -- Grafana contact-point webhook --------------------------------------
+    def grafana_webhook(self, payload: dict) -> int:
+        """POST with a custom JSON payload from a firing alert rule.
+        {"config_id": int, "delta": +1|-1, "rule": str}"""
+        cfg = self.db["ai_model_configurations"].get(payload["config_id"])
+        if cfg is None:
+            return 404
+        new = max(self.min_instances,
+                  min(self.max_instances, cfg["instances"] + payload["delta"]))
+        if new != cfg["instances"]:
+            self.db["ai_model_configurations"].update(cfg["id"], instances=new)
+            self.scale_events.append((self.loop.now, cfg["id"],
+                                      payload["delta"],
+                                      payload.get("rule", "")))
+        return 200

@@ -1,0 +1,73 @@
+"""Discrete-event simulation clock for the control plane.
+
+Every microservice of the paper (Job Worker loop every 15 s, Endpoint Worker
+health polls, Prometheus scrapes, Grafana alert evaluation, vLLM engine
+steps, network hops) is an event on this loop, so multi-hour autoscaling
+scenarios run in milliseconds of wall time and are fully deterministic.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+
+@dataclass(order=True)
+class _Event:
+    at: float
+    seq: int
+    fn: Callable = field(compare=False)
+    cancelled: bool = field(default=False, compare=False)
+
+
+class EventLoop:
+    def __init__(self):
+        self.now = 0.0
+        self._heap: list[_Event] = []
+        self._counter = itertools.count()
+
+    def call_at(self, at: float, fn: Callable) -> _Event:
+        ev = _Event(max(at, self.now), next(self._counter), fn)
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def call_after(self, delay: float, fn: Callable) -> _Event:
+        return self.call_at(self.now + delay, fn)
+
+    def every(self, period: float, fn: Callable, start: Optional[float] = None):
+        """Periodic task; fn(now) each tick."""
+        first = self.now + period if start is None else start
+
+        def tick():
+            fn(self.now)
+            self.call_at(self.now + period, tick)
+
+        self.call_at(first, tick)
+
+    def cancel(self, ev: _Event):
+        ev.cancelled = True
+
+    def run_until(self, t: float, max_events: int = 10_000_000):
+        n = 0
+        while self._heap and self._heap[0].at <= t and n < max_events:
+            ev = heapq.heappop(self._heap)
+            self.now = ev.at
+            if not ev.cancelled:
+                ev.fn()
+            n += 1
+        self.now = max(self.now, t)
+        if n >= max_events:
+            raise RuntimeError("event budget exhausted (livelock?)")
+
+    def run_while(self, cond: Callable[[], bool], max_t: float,
+                  max_events: int = 10_000_000):
+        n = 0
+        while self._heap and cond() and self.now < max_t and n < max_events:
+            ev = heapq.heappop(self._heap)
+            self.now = ev.at
+            if not ev.cancelled:
+                ev.fn()
+            n += 1
+        if n >= max_events:
+            raise RuntimeError("event budget exhausted (livelock?)")

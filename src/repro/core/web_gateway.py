@@ -1,0 +1,132 @@
+"""Web Gateway (paper §3.1.2): OpenAI-compatible entry point.
+
+Responsibilities reproduced: bearer-token authentication against the
+encrypted store with a TTL'd distributed memory cache; strong request
+validation; endpoint lookup in ai_model_endpoints; forwarding with all
+request parameters; custom status codes when no ready endpoint exists.
+
+Latency accounting (virtual clock): every hop/db trip adds to the request's
+client-observed times — this is what the Table-1 "Web Gateway vs vLLM node"
+comparison measures.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.core.db import Database
+from repro.core.simclock import EventLoop
+from repro.engine.request import Request
+
+# custom HTTP-ish status codes (paper: "custom status codes are returned")
+OK = 200
+UNAUTHENTICATED = 401
+MODEL_UNKNOWN = 460          # no configuration for requested model
+MODEL_NOT_READY = 461        # configured but no ready endpoint yet
+INSTANCE_UNREACHABLE = 462   # endpoint row exists but instance is gone
+
+
+@dataclass
+class GatewayLatency:
+    auth_cache_hit: float = 5e-5
+    auth_db_trip: float = 1.5e-3
+    endpoint_db_trip: float = 8e-4
+    forward_hop: float = 2.5e-4       # gateway -> compute node
+    response_hop: float = 2.5e-4      # per-token streaming return
+
+
+@dataclass
+class GatewayStats:
+    requests: int = 0
+    rejected_auth: int = 0
+    rejected_no_endpoint: int = 0
+    forwarded: int = 0
+    db_trips: int = 0
+    cache_hits: int = 0
+    per_status: dict = field(default_factory=dict)
+
+
+class WebGateway:
+    def __init__(self, db: Database, loop: EventLoop, registry: dict,
+                 latency: GatewayLatency = None, auth_cache_ttl: float = 60.0):
+        self.db = db
+        self.loop = loop
+        self.registry = registry                  # (node, port) -> instance
+        self.lat = latency or GatewayLatency()
+        self.auth_cache_ttl = auth_cache_ttl
+        self._auth_cache: dict[str, tuple] = {}   # api_key -> (tenant, expiry)
+        self._rr = itertools.count()              # round-robin cursor
+        self.stats = GatewayStats()
+
+    # ------------------------------------------------------------------
+    def _authenticate(self, api_key: str, now: float):
+        """Returns (tenant|None, latency_added)."""
+        hit = self._auth_cache.get(api_key)
+        if hit is not None and hit[1] > now:
+            self.stats.cache_hits += 1
+            return hit[0], self.lat.auth_cache_hit
+        self.stats.db_trips += 1
+        tenant = self.db.authenticate(api_key)
+        if tenant is not None:
+            self._auth_cache[api_key] = (tenant, now + self.auth_cache_ttl)
+        return tenant, self.lat.auth_db_trip
+
+    def _pick_endpoint(self, model_name: str):
+        eps = [ep for ep in self.db["ai_model_endpoints"].select(
+            model_name=model_name) if ep["ready_at"] is not None]
+        if not eps:
+            return None
+        eps.sort(key=lambda e: e["id"])
+        return eps[next(self._rr) % len(eps)]
+
+    # ------------------------------------------------------------------
+    def handle(self, api_key: str, model_name: str, req: Request) -> int:
+        """One inference request. Returns status; on 200 the request has
+        been forwarded (arrival at the engine = now + gateway latency)."""
+        now = self.loop.now
+        self.stats.requests += 1
+        req.metrics.gateway_time = now
+
+        try:
+            req.sampling.validate()    # strong typing/validation layer
+        except ValueError:
+            return self._status(422)
+
+        tenant, t_auth = self._authenticate(api_key, now)
+        if tenant is None:
+            self.stats.rejected_auth += 1
+            return self._status(UNAUTHENTICATED)
+
+        if not self.db["ai_model_configurations"].select(
+                model_name=model_name):
+            return self._status(MODEL_UNKNOWN)
+
+        self.stats.db_trips += 1
+        ep = self._pick_endpoint(model_name)
+        if ep is None:
+            self.stats.rejected_no_endpoint += 1
+            return self._status(MODEL_NOT_READY)
+
+        inst = self.registry.get((ep["node"], ep["port"]))
+        if inst is None or not inst.alive:
+            self.stats.rejected_no_endpoint += 1
+            return self._status(INSTANCE_UNREACHABLE)
+
+        delay = t_auth + self.lat.endpoint_db_trip + self.lat.forward_hop
+        # response streaming: client-side timestamps add the return hop
+        user_cb = req.on_token
+
+        def on_token(r, tok, t):
+            if user_cb is not None:
+                user_cb(r, tok, t + self.lat.response_hop)
+
+        req.on_token = on_token
+        self.loop.call_after(delay,
+                             lambda: inst.submit(req, bearer=ep["bearer_token"]))
+        self.stats.forwarded += 1
+        return self._status(OK)
+
+    def _status(self, code: int) -> int:
+        self.stats.per_status[code] = self.stats.per_status.get(code, 0) + 1
+        return code

@@ -1,0 +1,96 @@
+"""BurstGPT-like serving workload synthesis (Wang et al., KDD'25).
+
+The paper benchmarks with the *BurstGPT without fails 2* trace. The trace
+itself is not shipped offline, so this module synthesises request streams
+with the published summary statistics of that trace family:
+  * log-normal request input lengths (heavy tail), mean ~775 tokens for the
+    paper's 100-request sample (77561/100), clipped to [8, 8k];
+  * gamma-distributed output lengths, mean ~70 tokens (7049/100);
+  * bursty Gamma-process arrivals (CV > 1) for open-loop load, or
+    all-at-once arrival for the paper's N-concurrent closed benchmark.
+
+Seeded (paper: "the seed is set to 0 so every run uses the same samples").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.engine.request import Request, SamplingParams
+
+# Table-1 totals: input tokens are identical across configs (same sample),
+# outputs vary slightly (sampling); we match the input-side exactly-ish.
+MEAN_INPUT = {100: 775.61, 500: 762.9, 1000: 768.96}
+MEAN_OUTPUT = {100: 70.5, 500: 99.5, 1000: 141.4}
+
+
+@dataclass
+class Workload:
+    requests: list = field(default_factory=list)
+    arrivals: list = field(default_factory=list)   # seconds offsets
+
+
+def concurrent_burst(n: int, seed: int = 0, vocab: int = 32000,
+                     num_shared_prefixes: int = 8,
+                     shared_fraction: float = 0.95) -> Workload:
+    """The paper's benchmark shape: n concurrent requests, all at t=0.
+
+    Prompts draw most of their tokens from a small pool of shared prefixes
+    (chat templates / system prompts / repeated trace fills). This is what
+    makes the paper's TTFT medians physically consistent: at 1000 concurrent
+    requests the reported TTFT implies prefill throughput far above the
+    hardware's bf16 roofline *unless* most prompt blocks hit vLLM's prefix
+    cache (on by default in v0.10) — see EXPERIMENTS.md §Table-1.
+    Set shared_fraction=0 for fully-unique prompts (ablation).
+    """
+    rng = np.random.default_rng(seed)
+    mean_in = MEAN_INPUT.get(n, 770.0)
+    mean_out = MEAN_OUTPUT.get(n, 100.0)
+    sigma = 1.1
+    mu = np.log(mean_in) - sigma ** 2 / 2
+    in_lens = np.clip(rng.lognormal(mu, sigma, size=n), 8, 8192).astype(int)
+    # rescale to hit the trace's total input tokens ~ n * mean_in
+    in_lens = np.maximum(8, (in_lens * (mean_in * n / in_lens.sum()))
+                         .astype(int))
+    out_lens = np.maximum(1, rng.gamma(2.0, mean_out / 2.0, size=n)
+                          .astype(int))
+    # one master fill sequence: every prompt's shared part is a prefix of it
+    # (the fill-token behaviour of length-driven trace replay), so any two
+    # prompts share all complete blocks up to the shorter shared length
+    master = rng.integers(1, vocab, size=8192).tolist()
+    w = Workload()
+    for i in range(n):
+        ln = int(in_lens[i])
+        n_shared = int(ln * shared_fraction)
+        tail = rng.integers(1, vocab, size=ln - n_shared).tolist()
+        w.requests.append(Request(
+            prompt_tokens=master[:n_shared] + tail,
+            sampling=SamplingParams(
+                target_output_len=int(out_lens[i]),
+                max_new_tokens=int(out_lens[i]), seed=seed)))
+        w.arrivals.append(0.0)
+    return w
+
+
+def bursty_poisson(rate: float, duration: float, seed: int = 0,
+                   vocab: int = 32000, cv: float = 2.0) -> Workload:
+    """Open-loop bursty arrivals (Gamma renewal process, CV>1 = bursts).
+    Drives the autoscaling scenario benchmarks."""
+    rng = np.random.default_rng(seed)
+    w = Workload()
+    t = 0.0
+    shape = 1.0 / (cv * cv)
+    scale = 1.0 / (rate * shape)
+    while t < duration:
+        t += rng.gamma(shape, scale)
+        if t >= duration:
+            break
+        in_len = int(np.clip(rng.lognormal(6.0, 1.1), 8, 8192))
+        out_len = max(1, int(rng.gamma(2.0, 50.0)))
+        w.requests.append(Request(
+            prompt_tokens=rng.integers(1, vocab, size=in_len).tolist(),
+            sampling=SamplingParams(target_output_len=out_len,
+                                    max_new_tokens=out_len, seed=seed)))
+        w.arrivals.append(t)
+    return w

@@ -1,0 +1,185 @@
+"""Logical-axis sharding rules -> NamedSharding (MaxText-style).
+
+Params are annotated with logical axes at init (models/common.Param); this
+module translates them onto the production mesh with divisibility-aware
+rules: a logical axis maps to its mesh axis only if the dimension size is
+divisible by the mesh-axis extent and the mesh axis has not already been
+consumed by an earlier dimension of the same tensor.
+
+Modes:
+  * serve: pure tensor/expert parallel over "model"; params replicated over
+    "data"/"pod" (each data-parallel replica group serves its own traffic).
+  * train: TP over "model" + FSDP over "data" (embed-dim sharding of 2D+
+    weights and optimizer state = ZeRO-3), batch over ("pod", "data").
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import common as cm
+
+# logical axis -> mesh axis (serve mode)
+SERVE_RULES = {
+    "vocab": "model",
+    "q_heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "expert": "model",
+    "rnn": "model",
+    "ssm_heads": "model",
+    "embed": None,
+    "frontend": None,
+    "layers": None,
+}
+
+# train mode adds FSDP: the embed dim of big tensors shards over "data"
+TRAIN_RULES = dict(SERVE_RULES, embed="data")
+
+# activation logical axes
+ACT_RULES = {
+    "batch": ("pod", "data"),
+    "expert": "model",
+    "vocab": "model",     # keep logits vocab-sharded through the CE loss
+    "kv_seq": "model",    # decode attention stays on the seq-sharded cache
+}
+
+
+def mesh_axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        out = 1
+        for n in name:
+            out *= mesh.shape.get(n, 1)
+        return out
+    return mesh.shape.get(name, 1)
+
+
+def spec_for(mesh: Mesh, shape, axes, rules, min_size_to_shard: int = 2) -> P:
+    """Build a PartitionSpec for one tensor, divisibility-aware."""
+    used = set()
+    out = []
+    for dim, logical in zip(shape, axes):
+        mesh_ax = rules.get(logical) if logical is not None else None
+        if (mesh_ax is None or mesh_ax in used
+                or mesh_ax not in mesh.shape
+                or dim % mesh.shape[mesh_ax] != 0
+                or dim < min_size_to_shard):
+            out.append(None)
+        else:
+            out.append(mesh_ax)
+            used.add(mesh_ax)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def param_shardings(mesh: Mesh, params, axes, rules=SERVE_RULES):
+    """Sharding tree matching the params tree."""
+    return cm.tree_zip_map(
+        lambda p, a: NamedSharding(mesh, spec_for(mesh, p.shape, a, rules)),
+        params, axes)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def batch_sharding(mesh: Mesh, shape) -> NamedSharding:
+    """Shard dim 0 (global batch) over every data-like mesh axis present."""
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    n = mesh_axis_size(mesh, data_axes)
+    if not data_axes or shape[0] % n != 0:
+        # try "data" alone before giving up
+        if "data" in mesh.shape and shape[0] % mesh.shape["data"] == 0:
+            return NamedSharding(mesh, P("data"))
+        return NamedSharding(mesh, P())
+    return NamedSharding(mesh, P(data_axes))
+
+
+def cache_shardings(mesh: Mesh, cache_specs_tree, batch: int):
+    """KV/state caches: batch dim (axis 1 by convention) over data axes,
+    head-like dims over model when divisible."""
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    n_data = mesh_axis_size(mesh, data_axes)
+    n_model = mesh.shape.get("model", 1)
+
+    def one(spec):
+        shape = spec.shape
+        names = [None] * len(shape)
+        if len(shape) >= 2 and shape[1] == batch and batch % n_data == 0 \
+                and n_data > 1:
+            names[1] = data_axes
+        # shard the largest remaining dim over model if divisible
+        cand = sorted(range(len(shape)), key=lambda i: -shape[i])
+        for i in cand:
+            if names[i] is None and shape[i] % n_model == 0 \
+                    and shape[i] >= n_model and n_model > 1 and i != 1:
+                names[i] = "model"
+                break
+        while names and names[-1] is None:
+            names.pop()
+        return NamedSharding(mesh, P(*names))
+
+    return jax.tree.map(one, cache_specs_tree)
+
+
+# --------------------------------------------------------------------------
+# activation-sharding hook
+# --------------------------------------------------------------------------
+
+def install_activation_rules(mesh: Mesh):
+    """Route models' act_shard() calls to with_sharding_constraint."""
+
+    def attn_spec(x, logical):
+        """attention layout: heads over `model` when divisible, else
+        batch-parallel over (pod, data, model)."""
+        bi = logical.index("attn_batch")
+        hi = logical.index("attn_heads")
+        data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        n_model = mesh.shape.get("model", 1)
+        names = [None] * len(logical)
+        if n_model > 1 and x.shape[hi] % n_model == 0:
+            names[hi] = "model"
+            if x.shape[bi] % mesh_axis_size(mesh, data_axes) == 0 \
+                    and data_axes:
+                names[bi] = data_axes if len(data_axes) > 1 else data_axes[0]
+        else:
+            full = data_axes + (("model",) if n_model > 1 else ())
+            if full and x.shape[bi] % mesh_axis_size(mesh, full) == 0:
+                names[bi] = full if len(full) > 1 else full[0]
+            elif data_axes and x.shape[bi] % mesh_axis_size(
+                    mesh, data_axes) == 0:
+                names[bi] = data_axes if len(data_axes) > 1 else data_axes[0]
+        return P(*names)
+
+    def fn(x, logical):
+        if "attn_batch" in logical:
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, attn_spec(x, logical)))
+        names = []
+        used = set()
+        for i, l in enumerate(logical):
+            m = ACT_RULES.get(l)
+            if m is None:
+                names.append(None)
+                continue
+            ms = tuple(a for a in (m if isinstance(m, tuple) else (m,))
+                       if a in mesh.shape and a not in used)
+            if not ms or x.shape[i] % mesh_axis_size(mesh, ms) != 0:
+                names.append(None)
+            else:
+                names.append(ms if len(ms) > 1 else ms[0])
+                used.update(ms)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*names)))
+
+    cm.set_activation_rules(fn)
+
+
+def clear_activation_rules():
+    cm.set_activation_rules(None)

@@ -1,0 +1,143 @@
+"""LLMEngine: the vLLM analogue (one per Slurm job in the paper's layer 2).
+
+The engine owns: FCFS continuous-batching scheduler, paged-KV control plane,
+an executor (real JAX compute or the roofline simulator) and per-request
+streaming. Time is injected (`now`) so the whole serving stack runs on the
+control-plane's virtual clock; `step()` returns the model time consumed so
+the driver can advance it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.engine.kv_cache import BlockAllocator
+from repro.engine.metrics import EngineMetrics, snapshot
+from repro.engine.request import Request, RequestStatus
+from repro.engine.scheduler import Scheduler
+
+
+@dataclass
+class StepReport:
+    kind: str                  # prefill | decode | idle
+    elapsed: float
+    tokens: int = 0
+    finished: int = 0
+
+
+class LLMEngine:
+    def __init__(self, cfg, executor, num_blocks: int = 4096,
+                 block_size: int = 32, max_num_seqs: int = 64,
+                 max_prefill_tokens: int = 2048, max_model_len: int = 8192,
+                 enable_prefix_caching: bool = True):
+        self.cfg = cfg
+        self.executor = executor
+        self.allocator = BlockAllocator(
+            num_blocks, block_size, enable_prefix_caching=enable_prefix_caching)
+        self.scheduler = Scheduler(self.allocator, max_num_seqs=max_num_seqs,
+                                   max_prefill_tokens=max_prefill_tokens,
+                                   max_model_len=max_model_len)
+        self.metrics = EngineMetrics()
+        self._rng = np.random.default_rng(0)
+
+    # ------------------------------------------------------------------
+    def add_request(self, req: Request, now: float):
+        req.sampling.validate()
+        self.scheduler.add_request(req, now)
+
+    def has_work(self) -> bool:
+        return self.scheduler.has_work()
+
+    def snapshot(self, now: float) -> dict:
+        return snapshot(self, now)
+
+    # ------------------------------------------------------------------
+    def _sample(self, req: Request, logits: Optional[np.ndarray]) -> int:
+        sp = req.sampling
+        if logits is None:  # sim executor: synthesise deterministic ids
+            return int((hash((req.request_id, req.output_len)) % 1000) + 2)
+        logits = np.asarray(logits, np.float64)
+        if sp.temperature <= 1e-5:
+            return int(np.argmax(logits))
+        logits = logits / sp.temperature
+        if sp.top_k:
+            kth = np.partition(logits, -sp.top_k)[-sp.top_k]
+            logits = np.where(logits < kth, -np.inf, logits)
+        probs = np.exp(logits - logits.max())
+        probs /= probs.sum()
+        if sp.top_p < 1.0:
+            order = np.argsort(-probs)
+            csum = np.cumsum(probs[order])
+            cut = np.searchsorted(csum, sp.top_p) + 1
+            mask = np.zeros_like(probs)
+            mask[order[:cut]] = 1.0
+            probs = probs * mask
+            probs /= probs.sum()
+        rng = np.random.default_rng((sp.seed, req.request_id, req.output_len))
+        return int(rng.choice(len(probs), p=probs))
+
+    def _emit(self, seq, token: int, now: float):
+        req = seq.req
+        req.output_tokens.append(token)
+        if req.metrics.first_token_time is None:
+            req.metrics.first_token_time = now
+        if req.on_token is not None:
+            req.on_token(req, token, now)
+        if req.is_finished(token):
+            req.metrics.finish_time = now
+            self.metrics.record_finish(req)
+            self.scheduler.finish_seq(seq)
+            return True
+        return False
+
+    # ------------------------------------------------------------------
+    def step(self, now: float) -> StepReport:
+        out = self.scheduler.schedule(now)
+        self.metrics.preemptions += len(out.preempted)
+        if out.kind == "idle":
+            return StepReport("idle", 0.0)
+
+        prefill_specs = [{
+            "token_ids": seq.req.prompt_tokens,
+            "block_table": seq.kv.block_table,
+            "chunk": chunk,
+            "is_last": seq.prompt_done,
+            "slot": seq.slot,
+        } for seq, chunk in out.prefills]
+        decode_spec = None
+        if out.decode:
+            decode_spec = {
+                "slots": [s.slot for s in out.decode],
+                "tokens": [s.req.output_tokens[-1] if s.req.output_tokens
+                           else s.req.prompt_tokens[-1] for s in out.decode],
+                # position of the token being fed = index of its KV slot
+                "pos": [s.kv.num_tokens - 1 for s in out.decode],
+                "block_tables": [s.kv.block_table for s in out.decode],
+            }
+
+        pre_logits, dec_logits, elapsed = self.executor.step(
+            prefill_specs, decode_spec)
+        self.metrics.busy_time += elapsed
+        t_done = now + elapsed
+        finished = 0
+        tokens = 0
+
+        if out.decode:
+            for i, s in enumerate(out.decode):
+                row = None if dec_logits is None else dec_logits[i]
+                finished += int(self._emit(s, self._sample(s.req, row),
+                                           t_done))
+            self.metrics.tokens_generated += len(out.decode)
+            tokens += len(out.decode)
+
+        for i, (seq, (start, end)) in enumerate(out.prefills):
+            self.metrics.tokens_prefilled += end - start
+            tokens += end - start
+            if seq.prompt_done:
+                row = pre_logits[i] if pre_logits else None
+                tok = self._sample(seq.req, row)
+                finished += int(self._emit(seq, tok, t_done))
+
+        return StepReport("mixed", elapsed, tokens=tokens, finished=finished)

@@ -1,0 +1,143 @@
+"""Model executors behind the engine.
+
+RealExecutor   — actual JAX compute against the paged pool (dense/vlm/moe) or
+                 slot-dense caches (ssm/hybrid/audio). Used with reduced
+                 configs on CPU in tests/examples; the identical code path
+                 runs sharded on TPU.
+SimExecutor    — no compute; the roofline cost model supplies step times and
+                 the engine synthesises token ids. Used by the Table-1-scale
+                 virtual-clock benchmarks (50 runs × 1000 concurrency would
+                 be absurd to run with real compute on CPU).
+
+Both return (logits | None, elapsed_seconds) so the engine is agnostic.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.config import HardwareConfig, ModelConfig
+from repro.engine.costmodel import RooflineCost
+
+try:  # jax only needed for RealExecutor
+    import jax
+    import jax.numpy as jnp
+except ImportError:  # pragma: no cover
+    jax = None
+
+
+class SimExecutor:
+    """Analytic executor: timing only."""
+
+    needs_logits = False
+
+    def __init__(self, cfg: ModelConfig, hw: HardwareConfig, tp: int = 1,
+                 efficiency: float = 0.45):
+        self.cfg = cfg
+        self.cost = RooflineCost(cfg, hw, tp=tp, efficiency=efficiency)
+
+    def step(self, prefills: list, decode: Optional[dict]):
+        """Mixed step. Returns (prefill_logits, decode_logits, elapsed)."""
+        new_tokens = ctx = 0
+        for pf in prefills or ():
+            start, end = pf["chunk"]
+            new_tokens += end - start
+            ctx += end
+        batch = total_ctx = 0
+        if decode is not None:
+            batch = len(decode["slots"])
+            total_ctx = int(sum(p + 1 for p in decode["pos"]))
+        elapsed = self.cost.mixed_time(new_tokens, ctx, batch, total_ctx)
+        return ([None] * len(prefills or ()), None, elapsed)
+
+
+class RealExecutor:
+    """Paged-pool JAX executor (dense / vlm / moe families)."""
+
+    needs_logits = True
+
+    def __init__(self, cfg: ModelConfig, params, num_blocks: int,
+                 block_size: int, hw: HardwareConfig, tp: int = 1,
+                 backend: str = "ref", max_model_len: int = 4096,
+                 max_slots: int = 64):
+        from repro.engine import paged_model
+        from repro.models import api
+        self.cfg = cfg
+        self.params = params
+        self.block_size = block_size
+        self.num_blocks = num_blocks
+        self.backend = backend
+        self.cost = RooflineCost(cfg, hw, tp=tp)
+        self.api = api
+        self.paged = cfg.family in ("dense", "vlm", "moe")
+        self.max_model_len = max_model_len
+        if self.paged:
+            self.pool = paged_model.init_pool(cfg, num_blocks, block_size)
+            self._paged_model = paged_model
+            self.mb = -(-max_model_len // block_size)
+        else:
+            # state executor: one dense/state cache slab over all slots
+            self.cache = api.init_cache(cfg, max_slots, max_model_len,
+                                        dtype=jnp.float32)
+
+    # ------------------------------------------------------------------
+    def step(self, prefills: list, decode: Optional[dict]):
+        """Mixed step: decode batch first (pre-step KV state), then the
+        prefill chunks. One combined cost-model time (weights stream once)."""
+        new_tokens = ctx = 0
+        for pf in prefills or ():
+            start, end = pf["chunk"]
+            new_tokens += end - start
+            ctx += end
+        batch = total_ctx = 0
+        if decode is not None:
+            batch = len(decode["slots"])
+            total_ctx = int(sum(p + 1 for p in decode["pos"]))
+        elapsed = self.cost.mixed_time(new_tokens, ctx, batch, total_ctx)
+
+        dec_logits = self._decode(decode) if decode else None
+        pre_logits = [self._prefill(pf) for pf in prefills or ()]
+        return pre_logits, dec_logits, elapsed
+
+    def _prefill(self, pf: dict):
+        if not pf["is_last"]:
+            # chunked prefill: timing per chunk; compute happens once on the
+            # final chunk (whole-prompt recompute — numerically identical)
+            return None
+        toks = jnp.asarray(np.asarray(pf["token_ids"], np.int32))[None]
+        logits, cache = self.api.prefill_fn(self.params, self.cfg,
+                                            {"tokens": toks})
+        if self.paged:
+            bt = jnp.asarray(np.asarray(pf["block_table"], np.int32))
+            self.pool = self._paged_model.write_prefill(
+                self.pool, cache, bt, self.block_size)
+        else:
+            cache = self.api.pad_cache(self.cfg, cache, self.max_model_len)
+            slot = pf["slot"]
+            self.cache = jax.tree.map(
+                lambda slab, c: slab.at[:, slot].set(c[:, 0].astype(slab.dtype)),
+                self.cache, cache)
+        return np.asarray(logits[0])
+
+    def _decode(self, dec: dict):
+        slots, tokens, pos = dec["slots"], dec["tokens"], dec["pos"]
+        toks = jnp.asarray(np.asarray(tokens, np.int32))
+        posv = jnp.asarray(np.asarray(pos, np.int32))
+        if self.paged:
+            bt = np.zeros((len(slots), self.mb), np.int32)
+            for i, table in enumerate(dec["block_tables"]):
+                bt[i, :len(table)] = table
+            logits, self.pool = self._paged_model.decode_step(
+                self.params, self.cfg, toks, posv, self.pool,
+                jnp.asarray(bt), backend=self.backend)
+            return np.asarray(logits)
+        # state executor: gather slot caches, run decode_fn, scatter back
+        sl = jnp.asarray(np.asarray(slots, np.int32))
+        cache = jax.tree.map(lambda slab: slab[:, sl], self.cache)
+        logits, cache = self.api.decode_fn(self.params, self.cfg, toks,
+                                           cache, posv)
+        self.cache = jax.tree.map(
+            lambda slab, c: slab.at[:, sl].set(c.astype(slab.dtype)),
+            self.cache, cache)
+        return np.asarray(logits)

@@ -1,0 +1,218 @@
+"""PagedAttention KV-cache manager (the vLLM core, §3.1.1 of the paper).
+
+The KV cache is split into fixed-size blocks assigned to logical pages via
+per-sequence block tables; a central manager owns the free list with
+reference counting so blocks can be shared across sequences (prefix
+caching). This file is the *control plane* (pure Python, O(blocks) ints);
+the device-side pool lives in the executor and is indexed by the tables
+produced here.
+
+TPU adaptation: block_size defaults to 32 so a (block_size, head_dim) tile
+is (8,128)-aligned for VMEM, instead of vLLM's GPU-warp-derived 16.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+class OutOfBlocks(Exception):
+    pass
+
+
+@dataclass
+class Block:
+    idx: int
+    ref_count: int = 0
+    # filled token ids for prefix-hash reuse (content-addressed)
+    token_hash: Optional[int] = None
+
+
+class BlockAllocator:
+    """Free-list allocator with ref counting + content-hash prefix reuse."""
+
+    def __init__(self, num_blocks: int, block_size: int,
+                 enable_prefix_caching: bool = True):
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.blocks = [Block(i) for i in range(num_blocks)]
+        self.free_list = list(range(num_blocks - 1, -1, -1))
+        self.enable_prefix_caching = enable_prefix_caching
+        # token_hash -> block idx, for COMPLETE blocks only
+        self.prefix_index: dict[int, int] = {}
+        # blocks with ref_count 0 kept around for reuse (LRU-ish by order)
+        self._evictable: dict[int, None] = {}
+
+    # -- invariant helpers (exercised by hypothesis tests) ---------------
+    def num_free(self) -> int:
+        return len(self.free_list) + len(self._evictable)
+
+    def check_invariants(self):
+        held = sum(1 for b in self.blocks if b.ref_count > 0)
+        assert held + self.num_free() == self.num_blocks, \
+            f"leak: held={held} free={self.num_free()} total={self.num_blocks}"
+        for i in self.free_list:
+            assert self.blocks[i].ref_count == 0
+
+    # -- allocation -------------------------------------------------------
+    def allocate(self) -> int:
+        if self.free_list:
+            idx = self.free_list.pop()
+        elif self._evictable:
+            idx, _ = self._evictable.popitem()
+            old = self.blocks[idx]
+            if old.token_hash is not None:
+                self.prefix_index.pop(old.token_hash, None)
+                old.token_hash = None
+        else:
+            raise OutOfBlocks()
+        b = self.blocks[idx]
+        assert b.ref_count == 0
+        b.ref_count = 1
+        return idx
+
+    def fork(self, idx: int):
+        """Share an existing block (prefix reuse)."""
+        b = self.blocks[idx]
+        if b.ref_count == 0:  # resurrect from evictable pool
+            self._evictable.pop(idx, None)
+        b.ref_count += 1
+
+    def free(self, idx: int):
+        b = self.blocks[idx]
+        assert b.ref_count > 0, f"double free of block {idx}"
+        b.ref_count -= 1
+        if b.ref_count == 0:
+            if b.token_hash is not None and self.enable_prefix_caching:
+                self._evictable[idx] = None  # keep warm for prefix hits
+            else:
+                b.token_hash = None
+                self.free_list.append(idx)
+
+    def seal(self, idx: int, token_hash: int):
+        """Mark a block complete & content-addressed for future reuse."""
+        if not self.enable_prefix_caching:
+            return
+        self.blocks[idx].token_hash = token_hash
+        self.prefix_index[token_hash] = idx
+
+    def lookup(self, token_hash: int) -> Optional[int]:
+        if not self.enable_prefix_caching:
+            return None
+        idx = self.prefix_index.get(token_hash)
+        if idx is None:
+            return None
+        b = self.blocks[idx]
+        if b.token_hash != token_hash:
+            return None
+        return idx
+
+    @property
+    def utilization(self) -> float:
+        used = sum(1 for b in self.blocks if b.ref_count > 0)
+        return used / max(self.num_blocks, 1)
+
+
+def chain_hash(prev: int, tokens: tuple) -> int:
+    return hash((prev, tokens))
+
+
+class SequenceKV:
+    """Block table for one sequence."""
+
+    def __init__(self, allocator: BlockAllocator):
+        self.alloc = allocator
+        self.block_table: list[int] = []
+        self.num_tokens = 0
+        self._hash_chain = 0          # rolling prefix hash
+        self._owned_from = 0          # blocks [0, _owned_from) are shared
+
+    def blocks_needed(self, new_tokens: int) -> int:
+        bs = self.alloc.block_size
+        total = self.num_tokens + new_tokens
+        need = -(-total // bs)
+        return max(0, need - len(self.block_table))
+
+    def match_prefix(self, tokens: list) -> int:
+        """Try content-addressed reuse of complete prompt blocks.
+        Returns number of tokens covered by shared blocks. The final prompt
+        token is never covered (its forward pass must run for logits)."""
+        bs = self.alloc.block_size
+        assert self.num_tokens == 0
+        h = 0
+        covered = 0
+        for i in range((len(tokens) - 1) // bs):
+            chunk = tuple(tokens[i * bs:(i + 1) * bs])
+            h = chain_hash(h, chunk)
+            idx = self.alloc.lookup(h)
+            if idx is None:
+                break
+            self.alloc.fork(idx)
+            self.block_table.append(idx)
+            covered += bs
+        self._hash_chain = h if covered else 0
+        self.num_tokens = covered
+        self._owned_from = len(self.block_table)
+        return covered
+
+    def append_tokens(self, n: int, token_ids: Optional[list] = None):
+        """Reserve space for n new tokens (allocating blocks as needed) and
+        advance the fill pointer. token_ids (when given) seal completed
+        blocks for prefix reuse."""
+        bs = self.alloc.block_size
+        need = self.blocks_needed(n)
+        for _ in range(need):
+            self.block_table.append(self.alloc.allocate())
+        start = self.num_tokens
+        self.num_tokens += n
+        if token_ids is not None and self.alloc.enable_prefix_caching:
+            # seal any block that just became complete
+            first_complete = start // bs
+            last_complete = self.num_tokens // bs
+            for bi in range(first_complete, last_complete):
+                if bi < self._owned_from:
+                    continue
+                chunk = tuple(token_ids[bi * bs:(bi + 1) * bs])
+                if len(chunk) < bs:
+                    break
+                self._hash_chain = chain_hash(self._hash_chain, chunk)
+                self.alloc.seal(self.block_table[bi], self._hash_chain)
+
+    def extend_match(self, tokens: list) -> int:
+        """Leapfrog prefill using blocks sealed by OTHER sequences since
+        admission (called every scheduling round while prefilling). Only
+        applies when the fill pointer sits exactly at a block boundary and
+        the hash chain is intact; never covers the final prompt token."""
+        bs = self.alloc.block_size
+        if not self.alloc.enable_prefix_caching or self.num_tokens % bs:
+            return self.num_tokens
+        i = len(self.block_table)
+        if i * bs != self.num_tokens:
+            return self.num_tokens
+        h = self._hash_chain
+        while (i + 1) * bs <= len(tokens) - 1:
+            chunk = tuple(tokens[i * bs:(i + 1) * bs])
+            nh = chain_hash(h, chunk)
+            idx = self.alloc.lookup(nh)
+            if idx is None:
+                break
+            self.alloc.fork(idx)
+            self.block_table.append(idx)
+            h = nh
+            i += 1
+            self.num_tokens += bs
+        self._hash_chain = h
+        self._owned_from = len(self.block_table)
+        return self.num_tokens
+
+    def release(self):
+        for idx in self.block_table:
+            self.alloc.free(idx)
+        self.block_table = []
+        self.num_tokens = 0
+        self._hash_chain = 0
+        self._owned_from = 0
+
+    @property
+    def num_blocks(self) -> int:
+        return len(self.block_table)

@@ -1,0 +1,42 @@
+"""vLLM-style engine metrics.
+
+The Metrics Gateway scrapes `snapshot()` dicts (the paper scrapes vLLM's
+Prometheus endpoint); the autoscaler's alert rule evaluates `queue_time`
+sustained over time from these samples (§3.3: >5 s over 30 s -> +1 instance).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class EngineMetrics:
+    tokens_generated: int = 0
+    tokens_prefilled: int = 0
+    requests_finished: int = 0
+    requests_failed: int = 0
+    preemptions: int = 0
+    busy_time: float = 0.0          # model execution seconds
+    finished: list = field(default_factory=list)  # (req metrics, out_len)
+
+    def record_finish(self, req):
+        self.requests_finished += 1
+        self.finished.append((req.metrics, req.output_len))
+
+
+def snapshot(engine, now: float) -> dict:
+    """One Prometheus scrape."""
+    sched = engine.scheduler
+    m = engine.metrics
+    return {
+        "time": now,
+        "num_waiting": sched.num_waiting(),
+        "num_running": sched.num_running(),
+        "kv_utilization": sched.kv_utilization(),
+        "queue_time": sched.queue_time_of_head(now),
+        "tokens_generated_total": m.tokens_generated,
+        "tokens_prefilled_total": m.tokens_prefilled,
+        "requests_finished_total": m.requests_finished,
+        "preemptions_total": m.preemptions,
+        "busy_time_total": m.busy_time,
+    }

@@ -1,0 +1,81 @@
+"""Model glue for decoding against the paged KV pool.
+
+Supports the dense / vlm / moe families (the ones with a KV cache the paper
+technique applies to). Decode runs one token per active slot against the
+pool via the paged-attention kernel (ref backend on this container's CPU,
+Pallas on TPU). SSM/hybrid/audio families are served through the dense
+state executor instead (see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.kernels.paged_attention import ops as pa_ops
+from repro.models import common as cm
+from repro.models import moe as moe_mod
+
+
+def init_pool(cfg: ModelConfig, num_blocks: int, block_size: int,
+              dtype=jnp.float32):
+    shape = (cfg.num_layers, num_blocks, block_size, cfg.num_kv_heads,
+             cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+@functools.partial(jax.jit, static_argnames=("block_size",))
+def write_prefill(pool, cache, block_table, block_size: int):
+    """Scatter one sequence's dense prefill cache into its pool blocks.
+
+    cache: {"k": (L, 1, T, KV, D)}; block_table: (nb,) int32 where
+    nb = ceil(T / block_size). T is padded up to a whole block.
+    """
+    def scatter(pool_x, cache_x):
+        l, one, t, kvh, d = cache_x.shape
+        nb = block_table.shape[0]
+        pad = nb * block_size - t
+        c = jnp.pad(cache_x[:, 0], ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = c.reshape(l, nb, block_size, kvh, d).astype(pool_x.dtype)
+        return pool_x.at[:, block_table].set(c)
+
+    return {
+        "k": scatter(pool["k"], cache["k"]),
+        "v": scatter(pool["v"], cache["v"]),
+    }
+
+
+def decode_step(params, cfg: ModelConfig, tokens, pos, pool, block_tables,
+                backend: str = "ref"):
+    """tokens/pos: (S,); pool as init_pool; block_tables: (S, MB).
+    Returns (logits (S, V), new pool)."""
+    x = cm.embed(params["embedding"], tokens[:, None])   # (S, 1, d)
+    s = tokens.shape[0]
+    bs = pool["k"].shape[2]
+    blk = jnp.take_along_axis(block_tables, (pos // bs)[:, None], axis=1)[:, 0]
+    off = pos % bs
+    ctx = pos + 1
+
+    def body(x, inp):
+        lp, pk, pv = inp
+        h = cm.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = cm._qkv(lp["attn"], cfg, h, pos[:, None])
+        pk = pk.at[blk, off].set(k[:, 0].astype(pk.dtype))
+        pv = pv.at[blk, off].set(v[:, 0].astype(pv.dtype))
+        a = pa_ops.paged_attention(q[:, 0], pk, pv, block_tables, ctx,
+                                   backend=backend)
+        x = x + jnp.einsum("shd,hdo->so", a, lp["attn"]["wo"])[:, None]
+        h = cm.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            y, _ = moe_mod.moe_block(lp["moe"], cfg, h, capacity_factor=None)
+            x = x + y
+        else:
+            x = x + cm.mlp(lp["mlp"], h)
+        return x, {"k": pk, "v": pv}
+
+    x, pool = lax.scan(body, x, (params["layers"], pool["k"], pool["v"]))
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return cm.unembed(params["embedding"], x)[:, 0], pool

@@ -1,0 +1,126 @@
+"""Request/response data model for the serving engine (OpenAI-shaped).
+
+Mirrors the Web Gateway's strongly-typed request validation (paper §3.1.2):
+requests are validated once at the gateway, then flow to a vLLM-analogue
+engine which tracks per-request lifecycle timestamps used by the Table-1
+metrics (TTFT / E2EL / TPOT) and by the queue-time autoscaler (§3.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+
+class RequestStatus(enum.Enum):
+    WAITING = "waiting"        # FCFS queue (vLLM admission)
+    RUNNING = "running"        # holds decode slot + KV blocks
+    PREEMPTED = "preempted"    # evicted under memory pressure, re-queued
+    FINISHED = "finished"
+    FAILED = "failed"
+
+
+@dataclass
+class SamplingParams:
+    temperature: float = 1.0
+    top_k: int = 0             # 0 = disabled
+    top_p: float = 1.0
+    max_new_tokens: int = 128
+    # benchmark mode: stop exactly at target_output_len (BurstGPT replay)
+    target_output_len: Optional[int] = None
+    seed: int = 0
+    stop_token: Optional[int] = None
+
+    def validate(self):
+        """Gateway-side strong typing/validation (paper: 'request properties
+        are strongly typed and validated')."""
+        if not (0.0 <= self.temperature <= 2.0):
+            raise ValueError(f"temperature {self.temperature} out of [0,2]")
+        if not (0.0 < self.top_p <= 1.0):
+            raise ValueError(f"top_p {self.top_p} out of (0,1]")
+        if self.top_k < 0:
+            raise ValueError("top_k must be >= 0")
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+
+
+@dataclass
+class RequestMetrics:
+    arrival_time: float = 0.0          # enqueue at the engine
+    gateway_time: float = 0.0          # arrival at the web gateway
+    first_scheduled_time: Optional[float] = None
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    preemptions: int = 0
+
+    @property
+    def queue_time(self) -> Optional[float]:
+        if self.first_scheduled_time is None:
+            return None
+        return self.first_scheduled_time - self.arrival_time
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival_time
+
+    @property
+    def e2el(self) -> Optional[float]:
+        if self.finish_time is None:
+            return None
+        return self.finish_time - self.arrival_time
+
+    def tpot(self, output_len: int) -> Optional[float]:
+        """Paper eq. (1): tpot = (e2el - ttft) / (output_len - 1)."""
+        if self.finish_time is None or self.first_token_time is None:
+            return None
+        if output_len <= 1:
+            return 0.0
+        return (self.finish_time - self.first_token_time) / (output_len - 1)
+
+
+_REQUEST_COUNTER = [0]
+
+
+@dataclass
+class Request:
+    prompt_tokens: list
+    sampling: SamplingParams = field(default_factory=SamplingParams)
+    request_id: int = field(default_factory=lambda: _next_id())
+    model: str = ""
+    status: RequestStatus = RequestStatus.WAITING
+    output_tokens: list = field(default_factory=list)
+    metrics: RequestMetrics = field(default_factory=RequestMetrics)
+    # streaming callback: fn(request, token_id, now) — the engine calls this
+    # per generated token, matching the paper's streaming benchmark setup
+    on_token: Optional[Callable] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt_tokens)
+
+    @property
+    def output_len(self) -> int:
+        return len(self.output_tokens)
+
+    @property
+    def total_len(self) -> int:
+        return self.prompt_len + self.output_len
+
+    def target_len(self) -> int:
+        t = self.sampling.target_output_len
+        return t if t is not None else self.sampling.max_new_tokens
+
+    def is_finished(self, token: Optional[int] = None) -> bool:
+        if self.output_len >= self.target_len():
+            return True
+        stop = self.sampling.stop_token
+        return (stop is not None and token is not None and token == stop
+                and self.sampling.target_output_len is None)
+
+
+def _next_id() -> int:
+    _REQUEST_COUNTER[0] += 1
+    return _REQUEST_COUNTER[0]

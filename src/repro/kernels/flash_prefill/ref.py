@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for causal (optionally windowed) flash prefill attention.
+
+q, k, v : (B, T, H, D) / (B, S, KV, D); returns (B, T, H, D).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_prefill_ref(q, k, v, window: int = 0):
+    b, t, h, d = q.shape
+    kvh = k.shape[2]
+    qpk = h // kvh
+    qg = q.reshape(b, t, kvh, qpk, d).astype(jnp.float32)
+    kg = k.astype(jnp.float32)
+    vg = v.astype(jnp.float32)
+    logits = jnp.einsum("btkqd,bskd->bkqts", qg, kg) * (d ** -0.5)
+    i = jnp.arange(t)[:, None]
+    j = jnp.arange(t)[None, :]
+    mask = j <= i
+    if window:
+        mask &= j > i - window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkqts,bskd->btkqd", probs, vg)
+    return out.reshape(b, t, h, d).astype(q.dtype)

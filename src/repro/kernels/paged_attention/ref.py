@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the paged-attention decode kernel.
+
+Layouts (TPU-native):
+  q            : (S, H, D)          one new token per sequence
+  pool_k/v     : (NB, BS, KV, D)    global block pool
+  block_tables : (S, MB) int32      logical page -> physical block
+  context_lens : (S,)   int32       tokens valid per sequence (incl. new)
+
+GQA is handled by grouping H = KV * QPK query heads per kv head.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, pool_k, pool_v, block_tables, context_lens):
+    s, h, d = q.shape
+    nb, bs, kv, _ = pool_k.shape
+    mb = block_tables.shape[1]
+    qpk = h // kv
+
+    k = pool_k[block_tables]                      # (S, MB, BS, KV, D)
+    v = pool_v[block_tables]
+    k = k.reshape(s, mb * bs, kv, d)
+    v = v.reshape(s, mb * bs, kv, d)
+
+    qg = q.reshape(s, kv, qpk, d).astype(jnp.float32)
+    kg = jnp.moveaxis(k, 2, 1).astype(jnp.float32)  # (S, KV, MB*BS, D)
+    vg = jnp.moveaxis(v, 2, 1).astype(jnp.float32)
+
+    logits = jnp.einsum("skqd,sktd->skqt", qg, kg) * (d ** -0.5)
+    valid = (jnp.arange(mb * bs)[None, :] < context_lens[:, None])
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("skqt,sktd->skqd", probs, vg)
+    return out.reshape(s, h, d).astype(q.dtype)

@@ -1,0 +1,127 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+cost_analysis() supplies per-device HLO FLOPs and HBM bytes; collective
+bytes are NOT in cost_analysis, so we parse the optimized HLO text and sum
+operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, weighted by the ring-transfer factor for
+the participant-group size parsed from replica_groups.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:\w+\[[\d,]*\]\S*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))          # [G, n] = G groups of n
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+@dataclass
+class CollectiveStats:
+    # bytes *moved per device* (ring model), by op kind
+    by_kind: dict = field(default_factory=dict)
+    count: int = 0
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.by_kind.values())
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if m is None:
+            continue
+        out_bytes = _shape_bytes(m.group(1))
+        kind = m.group(2)
+        n = max(_group_size(line), 1)
+        if n == 1:
+            continue
+        if kind == "all-reduce":
+            moved = 2.0 * (n - 1) / n * out_bytes
+        elif kind == "all-gather":
+            moved = (n - 1) / n * out_bytes       # output is the full gather
+        elif kind == "reduce-scatter":
+            moved = (n - 1) * out_bytes           # output is the shard
+        elif kind == "all-to-all":
+            moved = (n - 1) / n * out_bytes
+        else:  # collective-permute
+            moved = float(out_bytes)
+        stats.by_kind[kind] = stats.by_kind.get(kind, 0.0) + moved
+        stats.count += 1
+    return stats
+
+
+def roofline_terms(compiled, hw, chips: int, model_flops: float) -> dict:
+    """The three §Roofline terms (seconds) + bookkeeping, from one compiled
+    dry-run executable. cost_analysis is per-device."""
+    ca = compiled.cost_analysis() or {}
+    flops_dev = float(ca.get("flops", 0.0))
+    bytes_dev = float(ca.get("bytes accessed", 0.0))
+    coll = collective_bytes(compiled.as_text())
+    mem = compiled.memory_analysis()
+
+    t_compute = flops_dev / hw.peak_flops_bf16
+    t_memory = bytes_dev / hw.hbm_bandwidth
+    t_coll = coll.total_bytes / hw.link_bandwidth
+
+    dominant = max(
+        (("compute", t_compute), ("memory", t_memory),
+         ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    hlo_flops_global = flops_dev * chips
+    return {
+        "flops_per_device": flops_dev,
+        "hbm_bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll.total_bytes,
+        "collectives_by_kind": dict(coll.by_kind),
+        "num_collectives": coll.count,
+        "t_compute": t_compute,
+        "t_memory": t_memory,
+        "t_collective": t_coll,
+        "dominant": dominant,
+        "step_time_est": max(t_compute, t_memory, t_coll),
+        "model_flops": model_flops,
+        "useful_flops_ratio": (model_flops / hlo_flops_global
+                               if hlo_flops_global else 0.0),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes if mem else None,
+            "output_bytes": mem.output_size_in_bytes if mem else None,
+            "temp_bytes": mem.temp_size_in_bytes if mem else None,
+            "alias_bytes": mem.alias_size_in_bytes if mem else None,
+        },
+    }

@@ -1,0 +1,70 @@
+"""Serving launcher: bring up the control plane + N instances of --arch and
+drive an open-loop workload (or stay idle with --duration for interactive
+poking from a REPL).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mistral-small-24b \
+        --instances 2 --rate 4 --duration 300
+"""
+import argparse
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mistral-small-24b")
+    ap.add_argument("--instances", type=int, default=1)
+    ap.add_argument("--rate", type=float, default=4.0)
+    ap.add_argument("--duration", type=float, default=300.0)
+    ap.add_argument("--hardware", default="h100-sxm",
+                    choices=["h100-sxm", "l40s", "tpu-v5e"])
+    ap.add_argument("--real-compute", action="store_true",
+                    help="reduced config + RealExecutor instead of the "
+                         "roofline simulator")
+    args = ap.parse_args()
+
+    from repro import configs
+    from repro.config import HARDWARE, TPU_V5E
+    from repro.core.controller import ClusterSpec, ControlPlane
+    from repro.data.burstgpt import bursty_poisson
+
+    hw = HARDWARE[args.hardware]
+    cfg = configs.get(args.arch)
+    factory = None
+    if args.real_compute:
+        import jax
+        from repro.engine.engine import LLMEngine
+        from repro.engine.executor import RealExecutor
+        from repro.models import api
+        cfg = cfg.reduced()
+        params, _ = api.init_params(cfg, jax.random.key(0))
+
+        def factory(c, tp):
+            ex = RealExecutor(c, params, num_blocks=512, block_size=16,
+                              hw=TPU_V5E, max_model_len=512, max_slots=8)
+            return LLMEngine(c, ex, num_blocks=512, block_size=16,
+                             max_num_seqs=8, max_prefill_tokens=256,
+                             max_model_len=512)
+
+    cp = ControlPlane(ClusterSpec(num_nodes=8, gpus_per_node=2,
+                                  hardware=hw),
+                      engine_factory=factory)
+    cp.add_tenant("serve", "sk-serve")
+    cp.add_model(cfg, instances=args.instances, est_load_time=45.0)
+    cp.run_until(120.0)
+    print(f"ready endpoints: {[(e['node'], e['port']) for e in cp.ready_endpoints(cfg.name)]}")
+
+    t0 = cp.loop.now
+    wl = bursty_poisson(args.rate, args.duration, seed=0,
+                        vocab=min(cfg.vocab_size, 32000))
+    for req, at in zip(wl.requests, wl.arrivals):
+        cp.loop.call_at(t0 + at, lambda r=req: cp.web_gateway.handle(
+            "sk-serve", cfg.name, r))
+    cp.run_until(t0 + args.duration + 120.0)
+    fin = sum(1 for r in wl.requests if r.status.value == "finished")
+    print(f"finished {fin}/{len(wl.requests)}; gateway stats: "
+          f"{cp.web_gateway.stats}")
+    print(f"scale events: {cp.metrics_gateway.scale_events}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Distributed training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+        --steps 100 [--devices 8] [--data 2 --model 4] [--reduced]
+
+With --devices N (CPU testing) the process forces N host devices BEFORE jax
+init and builds a (data, model) mesh; on a real TPU slice omit --devices and
+the mesh comes from the actual topology via make_production_mesh().
+"""
+import argparse
+import os
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--devices", type=int, default=0)
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="use the (16,16) 256-chip production mesh")
+    args = ap.parse_args()
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", ""))
+
+    import jax
+    from repro import configs
+    from repro.launch.mesh import make_host_mesh, make_production_mesh
+    from repro.train.loop import Trainer, TrainerConfig
+
+    cfg = configs.get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = None
+    if args.production_mesh:
+        mesh = make_production_mesh()
+    elif args.data * args.model > 1:
+        mesh = make_host_mesh(data=args.data, model=args.model)
+
+    tcfg = TrainerConfig(seq_len=args.seq_len,
+                         global_batch=args.global_batch, steps=args.steps,
+                         ckpt_dir=args.ckpt_dir, ckpt_every=50)
+    tr = Trainer(cfg, tcfg, mesh=mesh)
+    if tr.step_idx:
+        print(f"resuming from step {tr.step_idx}")
+    hist = tr.run()
+    tr.save()
+    print(f"done: step {tr.step_idx}, loss {hist[-1]['loss']:.4f}"
+          if hist else "no steps run")
+
+
+if __name__ == "__main__":
+    main()

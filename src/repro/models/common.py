@@ -1,0 +1,472 @@
+"""Shared pure-JAX building blocks for the model zoo.
+
+Every model is a pair of pytrees:
+  params : nested dict of jnp arrays (or ShapeDtypeStructs under eval_shape)
+  axes   : same structure, leaves are tuples of logical axis names
+
+Leaves are built through :class:`Param` so init code states the logical
+sharding axes exactly once; ``unzip`` splits the annotated tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+
+
+# --------------------------------------------------------------------------
+# Annotated parameter leaves
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Param:
+    value: Any
+    axes: tuple
+
+    def __post_init__(self):
+        shape = getattr(self.value, "shape", None)
+        if shape is not None and len(shape) != len(self.axes):
+            raise ValueError(f"axes {self.axes} rank != shape {shape}")
+
+
+def _is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def unzip(tree):
+    """Annotated tree -> (params, axes) with identical structure."""
+    params = jax.tree.map(lambda p: p.value, tree, is_leaf=_is_param)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=_is_param)
+    return params, axes
+
+
+def tree_zip_map(fn, params, axes):
+    """tree.map over (param_leaf, axes_tuple) where axes tuples are leaves."""
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_a = treedef.flatten_up_to(axes)
+    return jax.tree.unflatten(treedef,
+                              [fn(p, a) for p, a in zip(flat_p, flat_a)])
+
+
+def normal(key, shape, stddev, dtype):
+    return (stddev * jax.random.normal(key, shape)).astype(dtype)
+
+
+class Initializer:
+    """Sequential key-splitting initializer with a fan-in default.
+
+    With ``abstract=True`` every helper returns ShapeDtypeStruct leaves so a
+    trillion-parameter model's param tree can be built with zero allocation
+    and zero tracing (used by the multi-pod dry-run).
+    """
+
+    def __init__(self, key, dtype, abstract: bool = False):
+        self.key = key
+        self.dtype = dtype
+        self.abstract = abstract
+
+    def _next(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def _make(self, shape, axes, fn):
+        if self.abstract:
+            return Param(jax.ShapeDtypeStruct(tuple(shape), self.dtype), axes)
+        return Param(fn(), axes)
+
+    def dense(self, shape, axes, fan_in=None, scale=1.0):
+        fan_in = fan_in if fan_in is not None else shape[0]
+        std = scale * (fan_in ** -0.5)
+        return self._make(shape, axes,
+                          lambda: normal(self._next(), shape, std, self.dtype))
+
+    def embed(self, shape, axes, scale=1.0):
+        return self._make(shape, axes,
+                          lambda: normal(self._next(), shape, scale, self.dtype))
+
+    def ones(self, shape, axes):
+        return self._make(shape, axes, lambda: jnp.ones(shape, self.dtype))
+
+    def zeros(self, shape, axes):
+        return self._make(shape, axes, lambda: jnp.zeros(shape, self.dtype))
+
+    def linspace(self, shape, axes, lo, hi):
+        """Uniform-in-range init (used for SSM dt / decay params)."""
+        def fn():
+            n = int(np_prod(shape))
+            vals = jnp.linspace(lo, hi, n).reshape(shape)
+            return vals.astype(self.dtype)
+        return self._make(shape, axes, fn)
+
+
+def np_prod(shape):
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Activation-sharding hook (set by the launcher; no-op otherwise)
+# --------------------------------------------------------------------------
+
+_ACTIVATION_RULES: Optional[Callable] = None
+
+
+def set_activation_rules(fn: Optional[Callable]):
+    """fn(x, logical_axes) -> x, typically a with_sharding_constraint."""
+    global _ACTIVATION_RULES
+    _ACTIVATION_RULES = fn
+
+
+def act_shard(x, *logical):
+    if _ACTIVATION_RULES is None:
+        return x
+    return _ACTIVATION_RULES(x, logical)
+
+
+# --------------------------------------------------------------------------
+# Layer-stack scan (unrollable)
+#
+# XLA's HloCostAnalysis counts a while-loop body ONCE, ignoring the trip
+# count, so a scanned 61-layer stack under-reports FLOPs by 61x. The dry-run
+# therefore sets layer-scan unrolling ON: the HLO gets one op per layer
+# (bigger program, same math) and cost_analysis/collective counts become
+# exact. Runtime paths keep the rolled scan for fast compiles.
+# --------------------------------------------------------------------------
+
+_LAYER_SCAN_UNROLL = False
+
+
+def set_layer_scan_unroll(v: bool):
+    global _LAYER_SCAN_UNROLL
+    _LAYER_SCAN_UNROLL = bool(v)
+
+
+def layer_scan(body, init, xs):
+    length = jax.tree.leaves(xs)[0].shape[0]
+    return lax.scan(body, init, xs,
+                    unroll=length if _LAYER_SCAN_UNROLL else 1)
+
+
+# --------------------------------------------------------------------------
+# Normalisation
+# --------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps=1e-6):
+    # sum-of-squares via dot with f32 accumulation: avoids a standalone
+    # convert(x) op that XLA:CPU hoists out of the layer scan as a
+    # whole-stack f32 copy of the remat-saved carries (see EXPERIMENTS §Perf)
+    dtype = x.dtype
+    ss = jnp.einsum("...d,...d->...", x, x,
+                    preferred_element_type=jnp.float32)
+    r = lax.rsqrt(ss / x.shape[-1] + eps)[..., None]
+    return ((x * r) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    x = (x - mean) * lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embedding (NeoX rotate-half convention)
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., T, H, D); positions broadcastable to (..., T)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                         # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., T, D/2)
+    cos = jnp.cos(angles)[..., None, :]                  # (..., T, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention (GQA, optional qk-norm, full-causal / windowed / cached decode)
+# --------------------------------------------------------------------------
+
+def init_attention(ini: Initializer, cfg: ModelConfig, cross: bool = False):
+    d, hd = cfg.d_model, cfg.head_dim
+    p = {
+        "wq": ini.dense((d, cfg.num_heads, hd), ("embed", "q_heads", "head_dim")),
+        "wk": ini.dense((d, cfg.num_kv_heads, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ini.dense((d, cfg.num_kv_heads, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ini.dense((cfg.num_heads, hd, d), ("q_heads", "head_dim", "embed"),
+                        fan_in=cfg.num_heads * hd),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = ini.ones((hd,), ("head_dim",))
+        p["k_norm"] = ini.ones((hd,), ("head_dim",))
+    return p
+
+
+def _qkv(p, cfg: ModelConfig, x, positions, rope: bool = True):
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if rope and cfg.rope_theta > 0:  # rope_theta == 0 -> positions are learned
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def repeat_kv(k, q_per_kv: int):
+    """(B, S, KV, D) -> (B, S, KV*q_per_kv, D)."""
+    if q_per_kv == 1:
+        return k
+    b, s, kv, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, q_per_kv, d)).reshape(
+        b, s, kv * q_per_kv, d)
+
+
+def mha(q, k, v, mask, q_per_kv: int, seq_logical=None):
+    """q: (B,T,H,D); k,v: (B,S,KV,D); mask broadcastable to (B,1,T,S).
+
+    seq_logical: logical axis name pinning the KV sequence dim (decode path:
+    "kv_seq" -> the mesh model axis). Without the pin, GSPMD re-shards the
+    seq-sharded cache to head-sharded for this einsum via involuntary full
+    rematerialization — an all-gather of the entire cache per layer per
+    step (EXPERIMENTS.md §Perf, qwen3 decode iteration 2).
+    """
+    k = repeat_kv(k, q_per_kv)
+    v = repeat_kv(v, q_per_kv)
+    if seq_logical is not None:
+        k = act_shard(k, "batch", seq_logical, None, None)
+        v = act_shard(v, "batch", seq_logical, None, None)
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bthd,bshd->bhts", q, k).astype(jnp.float32) * scale
+    logits = jnp.where(mask, logits, -1e30)
+    if seq_logical is not None:
+        logits = act_shard(logits, "batch", None, None, seq_logical)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhts,bshd->bthd", probs, v)
+    return out
+
+
+def causal_mask(t: int, window: int = 0):
+    i = jnp.arange(t)[:, None]
+    j = jnp.arange(t)[None, :]
+    m = j <= i
+    if window:
+        m &= j > i - window
+    return m[None, None]  # (1,1,T,S)
+
+
+# above this length the XLA path uses chunked (triangular) attention so the
+# (T, S) logits tensor never materialises — required for the 32k prefill and
+# 4k train cells to fit HBM; the Pallas kernel is the TPU fast path.
+ATTN_CHUNK_T = 2048
+ATTN_CHUNK_Q = 1024
+
+
+def chunked_causal_mha(q, k, v, q_per_kv: int, window: int = 0,
+                       bq: int = ATTN_CHUNK_Q):
+    """Flash-style exact attention in pure jnp: a Python loop over query
+    chunks; each chunk attends only to its causal (and window-limited) key
+    prefix, so FLOPs are triangular-exact and transient memory is
+    O(bq × kv_len) per layer instead of O(T²)."""
+    b, t, h, d = q.shape
+    if t <= ATTN_CHUNK_T:
+        return mha(q, k, v, causal_mask(t, window), q_per_kv)
+    assert t % bq == 0, (t, bq)
+
+    @jax.checkpoint  # rematerialise each chunk's logits during bwd so only
+    def chunk(q_i, k_i, v_i, m):  # one chunk's (bq, kv) buffer is ever live
+        return mha(q_i, k_i, v_i, m, q_per_kv)
+
+    outs = []
+    for i in range(t // bq):
+        q_i = q[:, i * bq:(i + 1) * bq]
+        k_end = (i + 1) * bq
+        k_start = 0
+        if window:
+            k_start = max(0, i * bq - window + 1) // 128 * 128
+        k_i = k[:, k_start:k_end]
+        v_i = v[:, k_start:k_end]
+        ii = i * bq + jnp.arange(bq)[:, None]
+        jj = k_start + jnp.arange(k_end - k_start)[None, :]
+        m = jj <= ii
+        if window:
+            m &= jj > ii - window
+        outs.append(chunk(q_i, k_i, v_i, m[None, None]))
+    return jnp.concatenate(outs, axis=1)
+
+
+def _attn_layout(q, k, v, q_per_kv):
+    """Train/prefill attention layout, applied ONCE per layer (not per
+    chunk): heads over `model` when divisible, else batch-parallel over
+    (data×model) — otherwise attention compute replicates on the model axis
+    for archs whose head count doesn't divide it (smollm 9H, minicpm 36H,
+    whisper 12H). KV is pre-repeated to q heads so all three tensors get
+    the same verdict. EXPERIMENTS.md §Perf, smollm train hillclimb."""
+    k = repeat_kv(k, q_per_kv)
+    v = repeat_kv(v, q_per_kv)
+    q = act_shard(q, "attn_batch", None, "attn_heads", None)
+    k = act_shard(k, "attn_batch", None, "attn_heads", None)
+    v = act_shard(v, "attn_batch", None, "attn_heads", None)
+    return q, k, v
+
+
+def attention_train(p, cfg: ModelConfig, x, window: int = 0, positions=None):
+    """Full-sequence causal (optionally windowed) attention."""
+    b, t, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(t)[None, :]
+    q, k, v = _qkv(p, cfg, x, positions)
+    q, k, v = _attn_layout(q, k, v, cfg.q_per_kv)
+    out = chunked_causal_mha(q, k, v, 1, window)
+    out = act_shard(out, "batch", None, None, None)
+    return jnp.einsum("bthd,hdo->bto", out, p["wo"])
+
+
+def attention_decode(p, cfg: ModelConfig, x, cache_k, cache_v, pos,
+                     window: int = 0):
+    """One-token decode against a dense (B, S, KV, D) cache.
+
+    pos: (B,) current absolute position of the new token.
+    Returns (out, new_k_cache, new_v_cache). For windowed attention the cache
+    is a rolling buffer of size `window` indexed by pos % window.
+
+    Note (EXPERIMENTS.md §Perf, qwen3 decode iteration 1): a mask-select
+    formulation of this write was tried and REFUTED — GSPMD partitions the
+    scatter fine but re-materialised the select operand, 28x-ing collective
+    traffic. The scatter stays.
+    """
+    b = x.shape[0]
+    q, k, v = _qkv(p, cfg, x, pos[:, None])
+    slot = pos % window if window else pos
+    bidx = jnp.arange(b)
+    cache_k = cache_k.at[bidx, slot].set(k[:, 0])
+    cache_v = cache_v.at[bidx, slot].set(v[:, 0])
+    s = cache_k.shape[1]
+    j = jnp.arange(s)[None, :]
+    if window:
+        # entry at rolling index j holds absolute position p_j where
+        # p_j = pos - ((slot - j) % window); valid if p_j >= 0 and p_j >= pos-window+1
+        dist = (slot[:, None] - j) % window
+        abs_pos = pos[:, None] - dist
+        valid = abs_pos >= 0
+    else:
+        valid = j <= pos[:, None]
+    mask = valid[:, None, None, :]  # (B,1,1,S)
+    out = mha(q, cache_k, cache_v, mask, cfg.q_per_kv, seq_logical="kv_seq")
+    out = jnp.einsum("bthd,hdo->bto", out, p["wo"])
+    return out, cache_k, cache_v
+
+
+def attention_prefill(p, cfg: ModelConfig, x, window: int = 0):
+    """Prefill: full causal pass that also returns the populated cache.
+
+    Returns (out, k_cache, v_cache) where caches are (B, S, KV, D) — for
+    windowed attention only the last `window` positions are materialised in
+    rolling-buffer layout.
+    """
+    b, t, _ = x.shape
+    positions = jnp.arange(t)[None, :]
+    q, k, v = _qkv(p, cfg, x, positions)
+    qr, kr, vr = _attn_layout(q, k, v, cfg.q_per_kv)
+    out = chunked_causal_mha(qr, kr, vr, 1, window)
+    out = act_shard(out, "batch", None, None, None)
+    out = jnp.einsum("bthd,hdo->bto", out, p["wo"])
+    if window and t >= window:
+        # roll so that cache[j] holds absolute position t - window + ... in
+        # rolling layout: slot = position % window
+        last = lax.dynamic_slice_in_dim(k, t - window, window, axis=1)
+        lastv = lax.dynamic_slice_in_dim(v, t - window, window, axis=1)
+        shift = (t - window) % window
+        k_cache = jnp.roll(last, shift, axis=1)
+        v_cache = jnp.roll(lastv, shift, axis=1)
+    elif window:
+        # t < window: position i sits at slot i; pad the tail so the rolling
+        # buffer is always window-sized (decode indexes slot = pos % window)
+        pad = [(0, 0), (0, window - t), (0, 0), (0, 0)]
+        k_cache = jnp.pad(k, pad)
+        v_cache = jnp.pad(v, pad)
+    else:
+        k_cache, v_cache = k, v
+    return out, k_cache, v_cache
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+
+def init_mlp(ini: Initializer, d_model: int, d_ff: int, gated: bool = True):
+    if gated:
+        return {
+            "w_gate": ini.dense((d_model, d_ff), ("embed", "mlp")),
+            "w_up": ini.dense((d_model, d_ff), ("embed", "mlp")),
+            "w_down": ini.dense((d_ff, d_model), ("mlp", "embed")),
+        }
+    return {
+        "w_up": ini.dense((d_model, d_ff), ("embed", "mlp")),
+        "b_up": ini.zeros((d_ff,), ("mlp",)),
+        "w_down": ini.dense((d_ff, d_model), ("mlp", "embed")),
+        "b_down": ini.zeros((d_model,), ("embed",)),
+    }
+
+
+def mlp(p, x):
+    if "w_gate" in p:
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+        return h @ p["w_down"]
+    h = jax.nn.gelu(x @ p["w_up"] + p["b_up"])
+    return h @ p["w_down"] + p["b_down"]
+
+
+# --------------------------------------------------------------------------
+# Embedding / head / loss
+# --------------------------------------------------------------------------
+
+def init_embedding(ini: Initializer, cfg: ModelConfig):
+    p = {"tok": ini.embed((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                          scale=0.02)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = ini.dense((cfg.d_model, cfg.vocab_size),
+                                 ("embed", "vocab"))
+    return p
+
+
+def embed(p, tokens):
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def unembed(p, x):
+    w = p.get("unembed")
+    if w is None:
+        w = p["tok"].T
+    logits = x @ w
+    axes = ("batch",) + (None,) * (logits.ndim - 2) + ("vocab",)
+    return act_shard(logits, *axes)
+
+
+def cross_entropy(logits, labels, mask=None, z_loss: float = 1e-4):
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll + z_loss * jnp.square(lse)
+    if mask is not None:
+        loss = loss * mask
+        return jnp.sum(loss) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(loss)

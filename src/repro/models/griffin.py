@@ -1,0 +1,327 @@
+"""Griffin / RecurrentGemma hybrid: RG-LRU recurrent blocks + local attention.
+
+Layer pattern is cfg.block_pattern (default rec,rec,attn) repeated. The 38
+layers of recurrentgemma-9b are organised as 12 scanned super-blocks of
+(rec, rec, attn) plus a 2-layer (rec, rec) tail, so the scan stays
+homogeneous and the HLO stays small.
+
+The RG-LRU is a diagonal linear recurrence h_t = a_t*h_{t-1} + sqrt(1-a_t^2)
+* (i_t*u_t) with input and recurrence gates produced by block-diagonal
+projections (num_heads blocks). Training uses jax.lax.associative_scan over
+time (O(T log T) work, sub-quadratic — this is why long_500k runs for this
+arch); decode carries a fixed (B, W) state.
+
+Local attention uses MQA (kv=1) with a rolling-buffer cache of
+cfg.attn_window positions, so serve-time memory is O(window), not O(T).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.models import common as cm
+from repro.models import transformer as tfm
+
+C_GATE = 8.0  # Griffin's fixed gate sharpness
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _init_rec_layer(key, cfg: ModelConfig, abstract: bool = False):
+    ini = cm.Initializer(key, jnp.dtype(cfg.param_dtype), abstract)
+    w = cfg.rnn_width
+    h = cfg.num_heads
+    bs = w // h
+    return {
+        "w_gate_branch": ini.dense((cfg.d_model, w), ("embed", "rnn")),
+        "w_in": ini.dense((cfg.d_model, w), ("embed", "rnn")),
+        "w_out": ini.dense((w, cfg.d_model), ("rnn", "embed")),
+        "conv_w": ini.dense((cfg.conv_kernel, w), (None, "rnn"), fan_in=cfg.conv_kernel),
+        "conv_b": ini.zeros((w,), ("rnn",)),
+        "gate_x": ini.dense((h, bs, bs), ("q_heads", None, None), fan_in=bs),
+        "gate_a": ini.dense((h, bs, bs), ("q_heads", None, None), fan_in=bs),
+        "bias_x": ini.zeros((w,), ("rnn",)),
+        "bias_a": ini.zeros((w,), ("rnn",)),
+        # Λ init so a = sigmoid(Λ)^c spans (0.9, 0.999) roughly
+        "lam": ini.linspace((w,), ("rnn",), 0.7, 2.5),
+        "mlp": cm.init_mlp(ini, cfg.d_model, cfg.d_ff, gated=True),
+        "ln1": ini.ones((cfg.d_model,), ("embed",)),
+        "ln2": ini.ones((cfg.d_model,), ("embed",)),
+    }
+
+
+def _init_attn_layer(key, cfg: ModelConfig, abstract: bool = False):
+    ini = cm.Initializer(key, jnp.dtype(cfg.param_dtype), abstract)
+    return {
+        "attn": cm.init_attention(ini, cfg),
+        "mlp": cm.init_mlp(ini, cfg.d_model, cfg.d_ff, gated=True),
+        "ln1": ini.ones((cfg.d_model,), ("embed",)),
+        "ln2": ini.ones((cfg.d_model,), ("embed",)),
+    }
+
+
+def group_counts(cfg: ModelConfig):
+    """num_layers -> (full (rec,rec,attn) groups, tail rec layers)."""
+    pat = len(cfg.block_pattern) or 3
+    return cfg.num_layers // pat, cfg.num_layers % pat
+
+
+def _init_group(key, cfg: ModelConfig, abstract: bool = False):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "rec1": _init_rec_layer(k1, cfg, abstract),
+        "rec2": _init_rec_layer(k2, cfg, abstract),
+        "attn": _init_attn_layer(k3, cfg, abstract),
+    }
+
+
+def init(key, cfg: ModelConfig, abstract: bool = False):
+    k_emb, k_groups, k_tail = jax.random.split(key, 3)
+    ini = cm.Initializer(k_emb, jnp.dtype(cfg.param_dtype), abstract)
+    n_groups, n_tail = group_counts(cfg)
+    p = {
+        "embedding": cm.init_embedding(ini, cfg),
+        "groups": tfm.stacked_layer_init(k_groups, cfg, _init_group, abstract,
+                                         n=n_groups),
+        "final_norm": ini.ones((cfg.d_model,), ("embed",)),
+    }
+    if n_tail:
+        p["tail"] = tfm.stacked_layer_init(k_tail, cfg, _init_rec_layer,
+                                           abstract, n=n_tail)
+    return p
+
+
+# --------------------------------------------------------------------------
+# RG-LRU
+# --------------------------------------------------------------------------
+
+def _block_diag(u, w):
+    """u: (..., W), w: (H, bs, bs) block-diagonal matmul."""
+    h, bs, _ = w.shape
+    shape = u.shape
+    u = u.reshape(shape[:-1] + (h, bs))
+    out = jnp.einsum("...hi,hij->...hj", u, w)
+    return out.reshape(shape)
+
+
+def _rg_lru_gates(p, u):
+    """u: (..., W) -> (log_a, gated_input) elementwise terms."""
+    i_g = jax.nn.sigmoid(_block_diag(u, p["gate_x"]) + p["bias_x"])
+    r_g = jax.nn.sigmoid(_block_diag(u, p["gate_a"]) + p["bias_a"])
+    log_a = (-C_GATE * jax.nn.softplus(p["lam"].astype(jnp.float32))
+             * r_g.astype(jnp.float32))                       # (..., W) <= 0
+    a2 = jnp.exp(2.0 * log_a)
+    x_in = (i_g * u).astype(jnp.float32) * jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12))
+    return log_a, x_in
+
+
+def rg_lru_scan(p, u):
+    """Training path: u (B, T, W) -> h (B, T, W) via associative scan."""
+    log_a, x_in = _rg_lru_gates(p, u)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 + a2, b1 * jnp.exp(a2) + b2
+
+    log_acc, h = lax.associative_scan(combine, (log_a, x_in), axis=1)
+    return h.astype(u.dtype)
+
+
+def rg_lru_step(p, u, h_prev):
+    """Decode: u (B, W), h_prev (B, W) f32 -> (h_out, h_new)."""
+    log_a, x_in = _rg_lru_gates(p, u)
+    h_new = jnp.exp(log_a) * h_prev + x_in
+    return h_new.astype(u.dtype), h_new
+
+
+def causal_conv(x, w, b):
+    """Depthwise causal conv. x (B,T,W), w (k,W) -> (B,T,W)."""
+    k = w.shape[0]
+    out = jnp.zeros_like(x) + b
+    for i in range(k):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + w[k - 1 - i] * shifted
+    return out
+
+
+def causal_conv_step(x, conv_state, w, b):
+    """x (B,W), conv_state (B,k-1,W) -> (y (B,W), new_state)."""
+    window = jnp.concatenate([conv_state, x[:, None]], axis=1)  # (B,k,W)
+    y = jnp.einsum("bkw,kw->bw", window, w) + b
+    return y, window[:, 1:]
+
+
+# --------------------------------------------------------------------------
+# blocks
+# --------------------------------------------------------------------------
+
+def _rec_block_train(p, cfg: ModelConfig, x):
+    h = cm.rms_norm(x, p["ln1"], cfg.norm_eps)
+    gate = jax.nn.gelu(h @ p["w_gate_branch"])
+    u = causal_conv(h @ p["w_in"], p["conv_w"], p["conv_b"])
+    r = rg_lru_scan(p, u)
+    x = x + (gate * r) @ p["w_out"]
+    h = cm.rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + cm.mlp(p["mlp"], h)
+
+
+def _rec_block_step(p, cfg: ModelConfig, x, h_state, conv_state):
+    """x: (B, d) one token."""
+    h = cm.rms_norm(x, p["ln1"], cfg.norm_eps)
+    gate = jax.nn.gelu(h @ p["w_gate_branch"])
+    u, conv_state = causal_conv_step(h @ p["w_in"], conv_state,
+                                     p["conv_w"], p["conv_b"])
+    r, h_state = rg_lru_step(p, u, h_state)
+    x = x + (gate * r) @ p["w_out"]
+    h = cm.rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + cm.mlp(p["mlp"], h), h_state, conv_state
+
+
+def _rec_block_prefill(p, cfg: ModelConfig, x):
+    """Training-path compute that also returns final (h_state, conv_state)."""
+    h = cm.rms_norm(x, p["ln1"], cfg.norm_eps)
+    gate = jax.nn.gelu(h @ p["w_gate_branch"])
+    conv_in = h @ p["w_in"]
+    u = causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    log_a, x_in = _rg_lru_gates(p, u)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 + a2, b1 * jnp.exp(a2) + b2
+
+    _, hs = lax.associative_scan(combine, (log_a, x_in), axis=1)
+    r = hs.astype(u.dtype)
+    x = x + (gate * r) @ p["w_out"]
+    h2 = cm.rms_norm(x, p["ln2"], cfg.norm_eps)
+    out = x + cm.mlp(p["mlp"], h2)
+    k = cfg.conv_kernel
+    conv_state = jnp.pad(conv_in, ((0, 0), (k - 1, 0), (0, 0)))[:, -(k - 1):]
+    return out, hs[:, -1], conv_state
+
+
+def _attn_block_train(p, cfg: ModelConfig, x, positions):
+    h = cm.rms_norm(x, p["ln1"], cfg.norm_eps)
+    x = x + cm.attention_train(p["attn"], cfg, h, window=cfg.attn_window,
+                               positions=positions)
+    h = cm.rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + cm.mlp(p["mlp"], h)
+
+
+# --------------------------------------------------------------------------
+# forward / serving
+# --------------------------------------------------------------------------
+
+def forward_train(params, cfg: ModelConfig, tokens, remat: bool = True):
+    x = cm.embed(params["embedding"], tokens)
+    x = cm.act_shard(x, "batch", None, None)
+    t = x.shape[1]
+    positions = jnp.arange(t)[None, :]
+
+    def body(x, gp):
+        x = _rec_block_train(gp["rec1"], cfg, x)
+        x = _rec_block_train(gp["rec2"], cfg, x)
+        x = _attn_block_train(gp["attn"], cfg, x, positions)
+        return x, None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = cm.layer_scan(body_fn, x, params["groups"])
+    if "tail" in params:
+        def tail_body(x, lp):
+            return _rec_block_train(lp, cfg, x), None
+        x, _ = cm.layer_scan(tail_body, x, params["tail"])
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return cm.unembed(params["embedding"], x)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    del max_len  # window-bounded
+    n_groups, n_tail = group_counts(cfg)
+    w, k = cfg.rnn_width, cfg.conv_kernel
+    kv = (batch, cfg.attn_window, cfg.num_kv_heads, cfg.head_dim)
+    cache = {
+        "g_k": jnp.zeros((n_groups,) + kv, dtype),
+        "g_v": jnp.zeros((n_groups,) + kv, dtype),
+        "g_h": jnp.zeros((n_groups, batch, 2, w), jnp.float32),
+        "g_conv": jnp.zeros((n_groups, batch, 2, k - 1, w), dtype),
+    }
+    if n_tail:
+        cache["t_h"] = jnp.zeros((n_tail, batch, w), jnp.float32)
+        cache["t_conv"] = jnp.zeros((n_tail, batch, k - 1, w), dtype)
+    return cache
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+        jax.eval_shape(lambda: init_cache(cfg, batch, max_len, dtype)))
+
+
+def prefill(params, cfg: ModelConfig, tokens):
+    x = cm.embed(params["embedding"], tokens)
+    x = cm.act_shard(x, "batch", None, None)
+    t = x.shape[1]
+    positions = jnp.arange(t)[None, :]
+
+    def body(x, gp):
+        x, h1, c1 = _rec_block_prefill(gp["rec1"], cfg, x)
+        x, h2, c2 = _rec_block_prefill(gp["rec2"], cfg, x)
+        h = cm.rms_norm(x, gp["attn"]["ln1"], cfg.norm_eps)
+        a, ck, cv = cm.attention_prefill(gp["attn"]["attn"], cfg, h,
+                                         window=cfg.attn_window)
+        x = x + a
+        h = cm.rms_norm(x, gp["attn"]["ln2"], cfg.norm_eps)
+        x = x + cm.mlp(gp["attn"]["mlp"], h)
+        out_cache = {"g_k": ck, "g_v": cv,
+                     "g_h": jnp.stack([h1, h2], axis=1),
+                     "g_conv": jnp.stack([c1, c2], axis=1)}
+        return x, out_cache
+
+    x, cache = cm.layer_scan(body, x, params["groups"])
+    if "tail" in params:
+        def tail_body(x, lp):
+            x, h, c = _rec_block_prefill(lp, cfg, x)
+            return x, {"t_h": h, "t_conv": c}
+        x, tail_cache = cm.layer_scan(tail_body, x, params["tail"])
+        cache.update(tail_cache)
+    x = cm.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    return cm.unembed(params["embedding"], x)[:, 0], cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, pos):
+    x = cm.embed(params["embedding"], tokens[:, None])  # (B,1,d)
+    x = cm.act_shard(x, "batch", None, None)
+
+    def body(x, inp):
+        gp, ck, cv, hh, cc = inp
+        x2 = x[:, 0]
+        x2, h1, c1 = _rec_block_step(gp["rec1"], cfg, x2, hh[:, 0], cc[:, 0])
+        x2, h2, c2 = _rec_block_step(gp["rec2"], cfg, x2, hh[:, 1], cc[:, 1])
+        x = x2[:, None]
+        h = cm.rms_norm(x, gp["attn"]["ln1"], cfg.norm_eps)
+        a, ck, cv = cm.attention_decode(gp["attn"]["attn"], cfg, h, ck, cv,
+                                        pos, window=cfg.attn_window)
+        x = x + a
+        h = cm.rms_norm(x, gp["attn"]["ln2"], cfg.norm_eps)
+        x = x + cm.mlp(gp["attn"]["mlp"], h)
+        return x, {"g_k": ck, "g_v": cv, "g_h": jnp.stack([h1, h2], axis=1),
+                   "g_conv": jnp.stack([c1, c2], axis=1)}
+
+    x, new_cache = cm.layer_scan(
+        body, x, (params["groups"], cache["g_k"], cache["g_v"],
+                  cache["g_h"], cache["g_conv"]))
+    if "tail" in params:
+        def tail_body(x, inp):
+            lp, hh, cc = inp
+            x2, h, c = _rec_block_step(lp, cfg, x[:, 0], hh, cc)
+            return x2[:, None], {"t_h": h, "t_conv": c}
+        x, tail_cache = cm.layer_scan(tail_body, x,
+                                      (params["tail"], cache["t_h"], cache["t_conv"]))
+        new_cache.update(tail_cache)
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return cm.unembed(params["embedding"], x)[:, 0], new_cache

@@ -1,0 +1,274 @@
+"""Mamba-2 (SSD — state-space duality) decoder stack, attention-free.
+
+Training/prefill uses the chunked SSD algorithm from the Mamba-2 paper
+(block-diagonal intra-chunk attention-like term + inter-chunk linear
+recurrence over chunk states), which is O(T) in sequence length with
+O(T/chunk) materialised states — this is what makes the long_500k shape
+viable. Decode carries a fixed (B, H, P, S) state per layer.
+
+Paged-KV inapplicability (DESIGN.md §Arch-applicability): this family has no
+KV cache at all; the serving engine stores its fixed-size recurrent state in
+the state registry instead of the paged pool.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.models import common as cm
+from repro.models import transformer as tfm
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = d_in // cfg.ssm_head_dim
+    return d_in, nheads, cfg.ssm_n_groups, cfg.ssm_state_size
+
+
+def _init_layer(key, cfg: ModelConfig, abstract: bool = False):
+    ini = cm.Initializer(key, jnp.dtype(cfg.param_dtype), abstract)
+    d = cfg.d_model
+    d_in, nheads, g, s = _dims(cfg)
+    conv_dim = d_in + 2 * g * s
+    return {
+        "in_proj": ini.dense((d, 2 * d_in + 2 * g * s + nheads),
+                             ("embed", "rnn")),
+        "conv_w": ini.dense((cfg.conv_kernel, conv_dim), (None, "rnn"),
+                            fan_in=cfg.conv_kernel),
+        "conv_b": ini.zeros((conv_dim,), ("rnn",)),
+        "A_log": ini.linspace((nheads,), ("ssm_heads",), 0.0, 2.0),
+        "D": ini.ones((nheads,), ("ssm_heads",)),
+        "dt_bias": ini.linspace((nheads,), ("ssm_heads",), -4.6, 0.0),
+        "norm": ini.ones((d_in,), ("rnn",)),
+        "out_proj": ini.dense((d_in, d), ("rnn", "embed")),
+        "ln": ini.ones((d,), ("embed",)),
+    }
+
+
+def init(key, cfg: ModelConfig, abstract: bool = False):
+    k_emb, k_layers = jax.random.split(key, 2)
+    ini = cm.Initializer(k_emb, jnp.dtype(cfg.param_dtype), abstract)
+    return {
+        "embedding": cm.init_embedding(ini, cfg),
+        "layers": tfm.stacked_layer_init(k_layers, cfg, _init_layer, abstract),
+        "final_norm": ini.ones((cfg.d_model,), ("embed",)),
+    }
+
+
+# --------------------------------------------------------------------------
+# chunked SSD (training / prefill)
+# --------------------------------------------------------------------------
+
+def _segsum(x):
+    """x: (..., c) -> (..., c, c) lower-triangular pairwise sums
+    L[i,j] = sum_{j<k<=i} x[k] (−inf above diagonal)."""
+    c = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, init_state=None):
+    """Chunked state-space-dual scan.
+
+    x: (b,t,h,p)  dt: (b,t,h)  A: (h,)<0  B,C: (b,t,g,s) with h%g==0.
+    Returns (y (b,t,h,p), final_state (b,h,p,s)).
+    """
+    b, t, h, p = x.shape
+    g = B.shape[2]
+    rep = h // g
+    c = min(chunk, t)
+    assert t % c == 0, f"seq {t} not divisible by chunk {c}"
+    nc = t // c
+    f32 = jnp.float32
+
+    xr = x.reshape(b, nc, c, h, p)
+    dtr = dt.reshape(b, nc, c, h).astype(f32)
+    Br = jnp.repeat(B.reshape(b, nc, c, g, s_dim := B.shape[-1]), rep, axis=3)
+    Cr = jnp.repeat(C.reshape(b, nc, c, g, s_dim), rep, axis=3)
+
+    dA = dtr * A.astype(f32)                       # (b,nc,c,h)
+    dA_cs = jnp.cumsum(dA, axis=2)
+
+    # 1. intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(jnp.moveaxis(dA, 3, 2)))   # (b,nc,h,c,c)
+    dtx = (xr.astype(f32) * dtr[..., None])        # (b,nc,c,h,p)
+    y_diag = jnp.einsum("bzchs,bzlhs,bzhcl,bzlhp->bzchp",
+                        Cr.astype(f32), Br.astype(f32), L, dtx)
+
+    # 2. chunk states
+    decay = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)   # (b,nc,c,h)
+    states = jnp.einsum("bzlhs,bzlh,bzlhp->bzhps",
+                        Br.astype(f32), decay, dtx)
+
+    # 3. inter-chunk recurrence over nc chunk boundaries
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])      # (b,nc,h)
+
+    def scan_fn(carry, inp):
+        st, cd = inp
+        new = carry * cd[:, :, None, None] + st
+        return new, carry                          # emit state BEFORE chunk
+
+    init = (jnp.zeros((b, h, p, s_dim), f32) if init_state is None
+            else init_state.astype(f32))
+    final, prev_states = lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (b,nc,h,p,s)
+
+    # 4. inter-chunk (off-diagonal) output
+    state_decay = jnp.exp(dA_cs)                   # (b,nc,c,h)
+    y_off = jnp.einsum("bzchs,bzhps,bzch->bzchp",
+                       Cr.astype(f32), prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(b, t, h, p)
+    return y, final
+
+
+def ssd_step(x, dt, A, B, C, state):
+    """Single-token recurrence. x (b,h,p), dt (b,h), B,C (b,g,s),
+    state (b,h,p,s) -> (y, new_state)."""
+    f32 = jnp.float32
+    g = B.shape[1]
+    rep = x.shape[1] // g
+    Bh = jnp.repeat(B, rep, axis=1).astype(f32)    # (b,h,s)
+    Ch = jnp.repeat(C, rep, axis=1).astype(f32)
+    dt = dt.astype(f32)
+    dA = jnp.exp(dt * A.astype(f32))               # (b,h)
+    new = state * dA[..., None, None] + jnp.einsum(
+        "bh,bhp,bhs->bhps", dt, x.astype(f32), Bh)
+    y = jnp.einsum("bhps,bhs->bhp", new, Ch)
+    return y, new
+
+
+# --------------------------------------------------------------------------
+# layer plumbing
+# --------------------------------------------------------------------------
+
+def _split_proj(cfg, zxbcdt):
+    d_in, nheads, g, s = _dims(cfg)
+    z, xBC, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * g * s], axis=-1)
+    return z, xBC, dt
+
+
+def _split_xbc(cfg, xBC):
+    d_in, nheads, g, s = _dims(cfg)
+    x, B, C = jnp.split(xBC, [d_in, d_in + g * s], axis=-1)
+    return x, B, C
+
+
+def _layer_train(lp, cfg: ModelConfig, x, init_state=None, want_state=False):
+    b, t, d = x.shape
+    d_in, nheads, g, s = _dims(cfg)
+    h = cm.rms_norm(x, lp["ln"], cfg.norm_eps)
+    z, xBC, dt = _split_proj(cfg, h @ lp["in_proj"])
+    from repro.models.griffin import causal_conv
+    xBC = jax.nn.silu(causal_conv(xBC, lp["conv_w"], lp["conv_b"]))
+    xs, B, C = _split_xbc(cfg, xBC)
+    xs = xs.reshape(b, t, nheads, cfg.ssm_head_dim)
+    B = B.reshape(b, t, g, s)
+    C = C.reshape(b, t, g, s)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    y, state = ssd_chunked(xs, dt, A, B, C, cfg.ssm_chunk,
+                           init_state=init_state)
+    y = y.astype(x.dtype) + lp["D"].astype(x.dtype)[:, None] * xs
+    y = y.reshape(b, t, d_in)
+    y = cm.rms_norm(y * jax.nn.silu(z), lp["norm"], cfg.norm_eps)
+    out = x + y @ lp["out_proj"]
+    if want_state:
+        k = cfg.conv_kernel
+        conv_in = h @ lp["in_proj"]
+        _, xBC_raw, _ = _split_proj(cfg, conv_in)
+        conv_state = jnp.pad(xBC_raw, ((0, 0), (k - 1, 0), (0, 0)))[:, -(k - 1):]
+        return out, state, conv_state
+    return out
+
+
+def _layer_step(lp, cfg: ModelConfig, x, ssm_state, conv_state):
+    """x: (B, d) one token."""
+    b, d = x.shape
+    d_in, nheads, g, s = _dims(cfg)
+    h = cm.rms_norm(x, lp["ln"], cfg.norm_eps)
+    z, xBC, dt = _split_proj(cfg, h @ lp["in_proj"])
+    from repro.models.griffin import causal_conv_step
+    xBC, conv_state = causal_conv_step(xBC, conv_state, lp["conv_w"],
+                                       lp["conv_b"])
+    xBC = jax.nn.silu(xBC)
+    xs, B, C = _split_xbc(cfg, xBC)
+    xs = xs.reshape(b, nheads, cfg.ssm_head_dim)
+    B = B.reshape(b, g, s)
+    C = C.reshape(b, g, s)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    y, ssm_state = ssd_step(xs, dt, A, B, C, ssm_state)
+    y = y.astype(x.dtype) + lp["D"].astype(x.dtype)[:, None] * xs
+    y = y.reshape(b, d_in)
+    y = cm.rms_norm(y * jax.nn.silu(z), lp["norm"], cfg.norm_eps)
+    return x + y @ lp["out_proj"], ssm_state, conv_state
+
+
+# --------------------------------------------------------------------------
+# model API
+# --------------------------------------------------------------------------
+
+def forward_train(params, cfg: ModelConfig, tokens, remat: bool = True):
+    x = cm.embed(params["embedding"], tokens)
+    x = cm.act_shard(x, "batch", None, None)
+
+    def body(x, lp):
+        return _layer_train(lp, cfg, x), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = cm.layer_scan(body_fn, x, params["layers"])
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return cm.unembed(params["embedding"], x)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    del max_len
+    d_in, nheads, g, s = _dims(cfg)
+    conv_dim = d_in + 2 * g * s
+    return {
+        "ssm": jnp.zeros((cfg.num_layers, batch, nheads, cfg.ssm_head_dim, s),
+                         jnp.float32),
+        "conv": jnp.zeros((cfg.num_layers, batch, cfg.conv_kernel - 1,
+                           conv_dim), dtype),
+    }
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+        jax.eval_shape(lambda: init_cache(cfg, batch, max_len, dtype)))
+
+
+def prefill(params, cfg: ModelConfig, tokens):
+    x = cm.embed(params["embedding"], tokens)
+    x = cm.act_shard(x, "batch", None, None)
+
+    def body(x, lp):
+        x, st, cst = _layer_train(lp, cfg, x, want_state=True)
+        return x, {"ssm": st, "conv": cst}
+
+    x, cache = cm.layer_scan(body, x, params["layers"])
+    x = cm.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    return cm.unembed(params["embedding"], x)[:, 0], cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, pos):
+    del pos  # recurrent: position-free
+    x = cm.embed(params["embedding"], tokens[:, None])[:, 0]
+
+    def body(x, inp):
+        lp, st, cst = inp
+        x, st, cst = _layer_step(lp, cfg, x, st, cst)
+        return x, {"ssm": st, "conv": cst}
+
+    x, cache = cm.layer_scan(body, x, (params["layers"], cache["ssm"],
+                                       cache["conv"]))
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return cm.unembed(params["embedding"], x[:, None])[:, 0], cache

@@ -1,0 +1,192 @@
+"""Mixture-of-Experts decoder transformer (qwen3-moe, kimi-k2).
+
+Routing uses sort-based capacity dispatch (MegaBlocks-lite): tokens are
+sorted by expert id, placed into an (E, C, d) buffer and processed with a
+dense blocked einsum against stacked expert weights. FLOP cost equals the
+active-parameter cost (k tokens' worth per expert group), which keeps the
+roofline honest, and the (E, C, d) buffer is the natural unit for
+expert-parallel sharding over the `model` mesh axis (the scatter/gather pair
+lowers to an all-to-all under GSPMD).
+
+Capacity factor 1.25 by default; dropped tokens fall back to the shared
+expert path (or zero for pure-routed models) exactly like capacity-dropping
+GShard routers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.models import common as cm
+from repro.models import transformer as tfm
+
+CAPACITY_FACTOR = 1.25
+
+
+def _init_moe_block(ini: cm.Initializer, cfg: ModelConfig):
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    p = {
+        "router": ini.dense((d, e), ("embed", "expert"), scale=0.1),
+        "w_gate": ini.dense((e, d, f), ("expert", "embed", "mlp"), fan_in=d),
+        "w_up": ini.dense((e, d, f), ("expert", "embed", "mlp"), fan_in=d),
+        "w_down": ini.dense((e, f, d), ("expert", "mlp", "embed"), fan_in=f),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = cm.init_mlp(ini, d, cfg.moe_d_ff * cfg.num_shared_experts)
+    return p
+
+
+def _init_layer(key, cfg: ModelConfig, abstract: bool = False):
+    ini = cm.Initializer(key, jnp.dtype(cfg.param_dtype), abstract)
+    return {
+        "attn": cm.init_attention(ini, cfg),
+        "moe": _init_moe_block(ini, cfg),
+        "ln1": ini.ones((cfg.d_model,), ("embed",)),
+        "ln2": ini.ones((cfg.d_model,), ("embed",)),
+    }
+
+
+def init(key, cfg: ModelConfig, abstract: bool = False):
+    k_emb, k_layers = jax.random.split(key, 2)
+    ini = cm.Initializer(k_emb, jnp.dtype(cfg.param_dtype), abstract)
+    return {
+        "embedding": cm.init_embedding(ini, cfg),
+        "layers": tfm.stacked_layer_init(k_layers, cfg, _init_layer, abstract),
+        "final_norm": ini.ones((cfg.d_model,), ("embed",)),
+    }
+
+
+# --------------------------------------------------------------------------
+# routing + dispatch
+# --------------------------------------------------------------------------
+
+def moe_block(p, cfg: ModelConfig, x, capacity_factor=CAPACITY_FACTOR):
+    """x: (B, T, d) -> (y, aux_loss).
+
+    capacity_factor=None -> serving mode. For engine-sized batches (n<=64,
+    the decode-slot limit) cap = n, which is provably dropless: top-k
+    indices are distinct per token so an expert receives at most one entry
+    per token. Beyond that, 2x-headroom capacity bounds the dispatch buffer
+    (drops are then ~impossible unless routing is pathologically skewed).
+    Training uses the classic capacity-1.25 GShard router.
+    """
+    b, t, d = x.shape
+    n = b * t
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    xf = x.reshape(n, d)
+
+    logits = (xf @ p["router"]).astype(jnp.float32)          # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = lax.top_k(probs, k)                        # (N, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)    # renormalise
+
+    # ---- sort-based dispatch into (E, C, d) ----
+    if capacity_factor is None:
+        cap = n if n <= 64 else min(n, max(16, -((-n * k * 2) // e)))
+    else:
+        cap = int(max(1, (n * k * capacity_factor) // e))
+    flat_e = top_i.reshape(-1)                                # (N*k,)
+
+    # load-balancing aux loss (Switch-style), via scatter-add (no N×E one-hot)
+    counts = jnp.zeros((e,), jnp.float32).at[flat_e].add(1.0)
+    router_prob = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(counts / (n * k) * router_prob) * cfg.router_aux_loss_coef
+    flat_w = top_p.reshape(-1).astype(x.dtype)
+    flat_tok = jnp.repeat(jnp.arange(n), k)
+
+    order = jnp.argsort(flat_e)                               # stable
+    se, sw, stok = flat_e[order], flat_w[order], flat_tok[order]
+    # position of each entry within its expert's run
+    start = jnp.searchsorted(se, jnp.arange(e), side="left")  # (E,)
+    pos = jnp.arange(n * k) - start[se]
+    keep = pos < cap
+    slot = jnp.where(keep, se * cap + pos, e * cap)           # overflow slot
+
+    buf = jnp.zeros((e * cap + 1, d), x.dtype).at[slot].set(xf[stok])
+    buf = buf[:-1].reshape(e, cap, d)
+    buf = cm.act_shard(buf, "expert", None, None)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    out = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    out = cm.act_shard(out, "expert", None, None)
+
+    out_flat = out.reshape(e * cap, d)
+    gathered = jnp.where(keep[:, None], out_flat[jnp.minimum(slot, e * cap - 1)],
+                         0.0) * sw[:, None]
+    y = jnp.zeros((n, d), x.dtype).at[stok].add(gathered)
+
+    if "shared" in p:
+        y = y + cm.mlp(p["shared"], xf)
+    return y.reshape(b, t, d), aux
+
+
+# --------------------------------------------------------------------------
+# forward / serving
+# --------------------------------------------------------------------------
+
+def _block(lp, cfg: ModelConfig, x, positions, capacity_factor=CAPACITY_FACTOR):
+    h = cm.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    x = x + cm.attention_train(lp["attn"], cfg, h, positions=positions)
+    h = cm.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    y, aux = moe_block(lp["moe"], cfg, h, capacity_factor)
+    return x + y, aux
+
+
+def forward_train(params, cfg: ModelConfig, tokens, remat: bool = True,
+                  capacity_factor=CAPACITY_FACTOR):
+    x = cm.embed(params["embedding"], tokens)
+    x = cm.act_shard(x, "batch", None, None)
+    t = x.shape[1]
+    positions = jnp.arange(t)[None, :]
+
+    def body(carry, lp):
+        x = carry
+        x, aux = _block(lp, cfg, x, positions, capacity_factor)
+        return x, aux
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, auxes = cm.layer_scan(body_fn, x, params["layers"])
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return cm.unembed(params["embedding"], x), jnp.sum(auxes)
+
+
+init_cache = tfm.init_cache
+cache_specs = tfm.cache_specs
+
+
+def prefill(params, cfg: ModelConfig, tokens):
+    x = cm.embed(params["embedding"], tokens)
+    x = cm.act_shard(x, "batch", None, None)
+
+    def body(x, lp):
+        h = cm.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        a, k, v = cm.attention_prefill(lp["attn"], cfg, h)
+        x = x + a
+        h = cm.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        y, _ = moe_block(lp["moe"], cfg, h, capacity_factor=None)
+        return x + y, {"k": k, "v": v}
+
+    x, cache = cm.layer_scan(body, x, params["layers"])
+    x = cm.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    return cm.unembed(params["embedding"], x)[:, 0], cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, pos):
+    x = cm.embed(params["embedding"], tokens[:, None])
+    x = cm.act_shard(x, "batch", None, None)
+
+    def body(x, inp):
+        lp, ck, cv = inp
+        h = cm.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        a, ck, cv = cm.attention_decode(lp["attn"], cfg, h, ck, cv, pos)
+        x = x + a
+        h = cm.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        y, _ = moe_block(lp["moe"], cfg, h, capacity_factor=None)
+        return x + y, {"k": ck, "v": cv}
+
+    x, cache = cm.layer_scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return cm.unembed(params["embedding"], x)[:, 0], cache

@@ -1,0 +1,162 @@
+"""Dense decoder-only transformer (GQA, RoPE, SwiGLU, optional qk-norm).
+
+Covers families: dense (qwen3/smollm/phi3/minicpm/mistral-24b) and vlm
+(pixtral backbone — the vision frontend is a stub projection over
+precomputed patch embeddings, per the assignment).
+
+Layer stack is a single lax.scan over stacked layer params so the HLO stays
+small and compile time is bounded for 28-61 layer configs.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.models import common as cm
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig, abstract: bool = False):
+    ini = cm.Initializer(key, jnp.dtype(cfg.param_dtype), abstract)
+    return {
+        "attn": cm.init_attention(ini, cfg),
+        "mlp": cm.init_mlp(ini, cfg.d_model, cfg.d_ff, gated=True),
+        "ln1": ini.ones((cfg.d_model,), ("embed",)),
+        "ln2": ini.ones((cfg.d_model,), ("embed",)),
+    }
+
+
+def init(key, cfg: ModelConfig, abstract: bool = False):
+    """Returns annotated tree (cm.Param leaves)."""
+    k_emb, k_layers = jax.random.split(key, 2)
+    ini = cm.Initializer(k_emb, jnp.dtype(cfg.param_dtype), abstract)
+    p = {
+        "embedding": cm.init_embedding(ini, cfg),
+        "layers": stacked_layer_init(k_layers, cfg, _init_layer, abstract),
+        "final_norm": ini.ones((cfg.d_model,), ("embed",)),
+    }
+    if cfg.num_patches:
+        p["vision_proj"] = ini.dense((cfg.frontend_dim, cfg.d_model),
+                                     ("frontend", "embed"))
+    return p
+
+
+def stacked_layer_init(key, cfg: ModelConfig, init_layer_fn, abstract: bool,
+                       n: int | None = None):
+    """Shared by all scan-stacked models: init L layers, stack leaves,
+    prepend 'layers' to each leaf's logical axes."""
+    n = cfg.num_layers if n is None else n
+    if abstract:
+        rep = init_layer_fn(key, cfg, True)
+        return jax.tree.map(
+            lambda p: cm.Param(
+                jax.ShapeDtypeStruct((n,) + tuple(p.value.shape), p.value.dtype),
+                ("layers",) + p.axes),
+            rep, is_leaf=cm._is_param)
+    keys = jax.random.split(key, n)
+    per_layer = [init_layer_fn(k, cfg, False) for k in keys]
+    values = [jax.tree.map(lambda p: p.value, t, is_leaf=cm._is_param)
+              for t in per_layer]
+    axes0 = jax.tree.map(lambda p: ("layers",) + p.axes, per_layer[0],
+                         is_leaf=cm._is_param)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *values)
+    flat_v, treedef = jax.tree.flatten(stacked)
+    flat_a = treedef.flatten_up_to(axes0)
+    return jax.tree.unflatten(
+        treedef, [cm.Param(v, a) for v, a in zip(flat_v, flat_a)])
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+def _block(lp, cfg: ModelConfig, x, positions):
+    h = cm.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    x = x + cm.attention_train(lp["attn"], cfg, h, positions=positions)
+    h = cm.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    x = x + cm.mlp(lp["mlp"], h)
+    return x
+
+
+def forward_train(params, cfg: ModelConfig, tokens, patch_embeds=None,
+                  remat: bool = True):
+    """tokens: (B, T) -> logits (B, T, V)."""
+    x = cm.embed(params["embedding"], tokens)
+    if cfg.num_patches and patch_embeds is not None:
+        patches = patch_embeds.astype(x.dtype) @ params["vision_proj"]
+        x = jnp.concatenate([patches, x[:, cfg.num_patches:]], axis=1)
+    x = cm.act_shard(x, "batch", None, None)
+    t = x.shape[1]
+    positions = jnp.arange(t)[None, :]
+
+    def body(x, lp):
+        return _block(lp, cfg, x, positions), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = cm.layer_scan(body_fn, x, params["layers"])
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return cm.unembed(params["embedding"], x)
+
+
+# --------------------------------------------------------------------------
+# serving: dense-cache prefill / decode
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    shape = (cfg.num_layers, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    shape = (cfg.num_layers, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    sds = jax.ShapeDtypeStruct(shape, dtype)
+    return {"k": sds, "v": sds}
+
+
+def prefill(params, cfg: ModelConfig, tokens, patch_embeds=None):
+    """Full prefill pass. Returns (last-token logits, cache (len=T))."""
+    x = cm.embed(params["embedding"], tokens)
+    if cfg.num_patches and patch_embeds is not None:
+        patches = patch_embeds.astype(x.dtype) @ params["vision_proj"]
+        x = jnp.concatenate([patches, x[:, cfg.num_patches:]], axis=1)
+    x = cm.act_shard(x, "batch", None, None)
+
+    def body(x, lp):
+        h = cm.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        a, k, v = cm.attention_prefill(lp["attn"], cfg, h)
+        x = x + a
+        h = cm.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + cm.mlp(lp["mlp"], h)
+        return x, {"k": k, "v": v}
+
+    x, cache = cm.layer_scan(body, x, params["layers"])
+    x = cm.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = cm.unembed(params["embedding"], x)[:, 0]
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, pos):
+    """tokens: (B,) next input token; pos: (B,) its absolute position.
+    Returns (logits (B,V), new cache)."""
+    x = cm.embed(params["embedding"], tokens[:, None])
+    x = cm.act_shard(x, "batch", None, None)
+
+    def body(x, inp):
+        lp, ck, cv = inp
+        h = cm.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        a, ck, cv = cm.attention_decode(lp["attn"], cfg, h, ck, cv, pos)
+        x = x + a
+        h = cm.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + cm.mlp(lp["mlp"], h)
+        return x, {"k": ck, "v": cv}
+
+    x, cache = cm.layer_scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = cm.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return cm.unembed(params["embedding"], x)[:, 0], cache

@@ -1,0 +1,207 @@
+"""Whisper-style encoder-decoder (audio backbone).
+
+Per the assignment the conv frontend is a STUB: `input_specs()` provides
+precomputed frame embeddings (B, enc_seq, frontend_dim); the model owns a
+single linear frontend projection. Positions are learned embeddings
+(rope_theta=0), norms are LayerNorm with bias, MLPs are non-gated GELU —
+matching the Whisper family. Decoder self-attention carries a dense KV
+cache; cross-attention K/V are computed once at prefill and are immutable
+afterwards (they never grow — noted in DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.models import common as cm
+from repro.models import transformer as tfm
+
+
+def _ln(ini, d):
+    return {"scale": ini.ones((d,), ("embed",)),
+            "bias": ini.zeros((d,), ("embed",))}
+
+
+def _apply_ln(p, x, eps):
+    return cm.layer_norm(x, p["scale"], p["bias"], eps)
+
+
+def _init_enc_layer(key, cfg: ModelConfig, abstract: bool = False):
+    ini = cm.Initializer(key, jnp.dtype(cfg.param_dtype), abstract)
+    return {
+        "attn": cm.init_attention(ini, cfg),
+        "mlp": cm.init_mlp(ini, cfg.d_model, cfg.d_ff, gated=False),
+        "ln1": _ln(ini, cfg.d_model),
+        "ln2": _ln(ini, cfg.d_model),
+    }
+
+
+def _init_dec_layer(key, cfg: ModelConfig, abstract: bool = False):
+    ini = cm.Initializer(key, jnp.dtype(cfg.param_dtype), abstract)
+    return {
+        "attn": cm.init_attention(ini, cfg),
+        "xattn": cm.init_attention(ini, cfg, cross=True),
+        "mlp": cm.init_mlp(ini, cfg.d_model, cfg.d_ff, gated=False),
+        "ln1": _ln(ini, cfg.d_model),
+        "ln2": _ln(ini, cfg.d_model),
+        "ln3": _ln(ini, cfg.d_model),
+    }
+
+
+def init(key, cfg: ModelConfig, abstract: bool = False):
+    k_emb, k_enc, k_dec = jax.random.split(key, 3)
+    ini = cm.Initializer(k_emb, jnp.dtype(cfg.param_dtype), abstract)
+    return {
+        "embedding": cm.init_embedding(ini, cfg),
+        "frontend": ini.dense((cfg.frontend_dim, cfg.d_model),
+                              ("frontend", "embed")),
+        "pos_enc": ini.embed((cfg.encoder_seq_len, cfg.d_model),
+                             (None, "embed"), scale=0.02),
+        "pos_dec": ini.embed((cfg.max_position_embeddings, cfg.d_model),
+                             (None, "embed"), scale=0.02),
+        "enc_layers": tfm.stacked_layer_init(k_enc, cfg, _init_enc_layer,
+                                             abstract, n=cfg.encoder_layers),
+        "dec_layers": tfm.stacked_layer_init(k_dec, cfg, _init_dec_layer,
+                                             abstract, n=cfg.num_layers),
+        "enc_norm": _ln(ini, cfg.d_model),
+        "final_norm": _ln(ini, cfg.d_model),
+    }
+
+
+# --------------------------------------------------------------------------
+# encoder
+# --------------------------------------------------------------------------
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: (B, S_enc, frontend_dim) -> (B, S_enc, d)."""
+    x = frames.astype(jnp.dtype(cfg.param_dtype)) @ params["frontend"]
+    x = x + params["pos_enc"][None, :x.shape[1]]
+    x = cm.act_shard(x, "batch", None, None)
+    b, s, _ = x.shape
+    full_mask = jnp.ones((1, 1, s, s), bool)
+
+    def body(x, lp):
+        h = _apply_ln(lp["ln1"], x, cfg.norm_eps)
+        q, k, v = cm._qkv(lp["attn"], cfg, h, jnp.arange(s)[None, :])
+        a = cm.mha(q, k, v, full_mask, cfg.q_per_kv)
+        x = x + jnp.einsum("bthd,hdo->bto", a, lp["attn"]["wo"])
+        h = _apply_ln(lp["ln2"], x, cfg.norm_eps)
+        return x + cm.mlp(lp["mlp"], h), None
+
+    x, _ = cm.layer_scan(body, x, params["enc_layers"])
+    return _apply_ln(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _cross_kv(lp, cfg, enc_out):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, lp["xattn"]["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, lp["xattn"]["wv"])
+    return k, v
+
+
+def _cross_attend(lp, cfg, x, ck, cv):
+    q = jnp.einsum("btd,dhk->bthk", x, lp["xattn"]["wq"])
+    s = ck.shape[1]
+    mask = jnp.ones((1, 1, x.shape[1], s), bool)
+    a = cm.mha(q, ck, cv, mask, cfg.q_per_kv)
+    return jnp.einsum("bthd,hdo->bto", a, lp["xattn"]["wo"])
+
+
+# --------------------------------------------------------------------------
+# decoder: train / prefill / decode
+# --------------------------------------------------------------------------
+
+def _dec_block(lp, cfg, x, enc_out, positions):
+    h = _apply_ln(lp["ln1"], x, cfg.norm_eps)
+    x = x + cm.attention_train(lp["attn"], cfg, h, positions=positions)
+    h = _apply_ln(lp["ln2"], x, cfg.norm_eps)
+    ck, cv = _cross_kv(lp, cfg, enc_out)
+    x = x + _cross_attend(lp, cfg, h, ck, cv)
+    h = _apply_ln(lp["ln3"], x, cfg.norm_eps)
+    return x + cm.mlp(lp["mlp"], h)
+
+
+def forward_train(params, cfg: ModelConfig, tokens, frames, remat: bool = True):
+    enc_out = encode(params, cfg, frames)
+    x = cm.embed(params["embedding"], tokens)
+    t = x.shape[1]
+    x = x + params["pos_dec"][None, :t]
+    x = cm.act_shard(x, "batch", None, None)
+    positions = jnp.arange(t)[None, :]
+
+    def body(x, lp):
+        return _dec_block(lp, cfg, x, enc_out, positions), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = cm.layer_scan(body_fn, x, params["dec_layers"])
+    x = _apply_ln(params["final_norm"], x, cfg.norm_eps)
+    return cm.unembed(params["embedding"], x)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    kv = (cfg.num_layers, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    xkv = (cfg.num_layers, batch, cfg.encoder_seq_len, cfg.num_kv_heads,
+           cfg.head_dim)
+    return {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype),
+            "ck": jnp.zeros(xkv, dtype), "cv": jnp.zeros(xkv, dtype)}
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+        jax.eval_shape(lambda: init_cache(cfg, batch, max_len, dtype)))
+
+
+def prefill(params, cfg: ModelConfig, tokens, frames):
+    enc_out = encode(params, cfg, frames)
+    x = cm.embed(params["embedding"], tokens)
+    t = x.shape[1]
+    x = x + params["pos_dec"][None, :t]
+    x = cm.act_shard(x, "batch", None, None)
+    positions = jnp.arange(t)[None, :]
+
+    def body(x, lp):
+        h = _apply_ln(lp["ln1"], x, cfg.norm_eps)
+        q, k, v = cm._qkv(lp["attn"], cfg, h, positions)
+        a = cm.mha(q, k, v, cm.causal_mask(t), cfg.q_per_kv)
+        x = x + jnp.einsum("bthd,hdo->bto", a, lp["attn"]["wo"])
+        h = _apply_ln(lp["ln2"], x, cfg.norm_eps)
+        ck, cv = _cross_kv(lp, cfg, enc_out)
+        x = x + _cross_attend(lp, cfg, h, ck, cv)
+        h = _apply_ln(lp["ln3"], x, cfg.norm_eps)
+        x = x + cm.mlp(lp["mlp"], h)
+        return x, {"k": k, "v": v, "ck": ck, "cv": cv}
+
+    x, cache = cm.layer_scan(body, x, params["dec_layers"])
+    x = _apply_ln(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    return cm.unembed(params["embedding"], x)[:, 0], cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, pos):
+    x = cm.embed(params["embedding"], tokens[:, None])
+    x = x + params["pos_dec"][pos][:, None]
+    x = cm.act_shard(x, "batch", None, None)
+    b = x.shape[0]
+    bidx = jnp.arange(b)
+
+    def body(x, inp):
+        lp, k_c, v_c, ck, cv = inp
+        h = _apply_ln(lp["ln1"], x, cfg.norm_eps)
+        q, k, v = cm._qkv(lp["attn"], cfg, h, pos[:, None])
+        k_c = k_c.at[bidx, pos].set(k[:, 0])
+        v_c = v_c.at[bidx, pos].set(v[:, 0])
+        s = k_c.shape[1]
+        mask = (jnp.arange(s)[None, :] <= pos[:, None])[:, None, None, :]
+        a = cm.mha(q, k_c, v_c, mask, cfg.q_per_kv)
+        x = x + jnp.einsum("bthd,hdo->bto", a, lp["attn"]["wo"])
+        h = _apply_ln(lp["ln2"], x, cfg.norm_eps)
+        x = x + _cross_attend(lp, cfg, h, ck, cv)
+        h = _apply_ln(lp["ln3"], x, cfg.norm_eps)
+        x = x + cm.mlp(lp["mlp"], h)
+        return x, {"k": k_c, "v": v_c, "ck": ck, "cv": cv}
+
+    x, cache = cm.layer_scan(body, x, (params["dec_layers"], cache["k"],
+                                       cache["v"], cache["ck"], cache["cv"]))
+    x = _apply_ln(params["final_norm"], x, cfg.norm_eps)
+    return cm.unembed(params["embedding"], x)[:, 0], cache

@@ -1,0 +1,122 @@
+"""Training loop with checkpoint/restart fault tolerance.
+
+Designed for the 1000-node posture: pure-function data pipeline (restart
+replays exactly), atomic checkpoints every N steps, resume-from-latest on
+construction, and elastic re-meshing (a checkpoint saved on one mesh
+restores onto another — shardings are applied at restore).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.data.tokens import DataConfig, TokenPipeline
+from repro.distributed import checkpoint as ckpt
+from repro.distributed import sharding as sh
+from repro.models import api
+from repro.train.optimizer import AdamW, cosine_schedule
+from repro.train.step import init_train_state, make_train_step
+
+
+@dataclass
+class TrainerConfig:
+    seq_len: int = 512
+    global_batch: int = 8
+    steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    peak_lr: float = 3e-4
+    warmup_steps: int = 20
+    seed: int = 0
+    log_every: int = 10
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainerConfig,
+                 mesh=None, schedule: Optional[Callable] = None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.opt = AdamW(schedule or cosine_schedule(
+            tcfg.peak_lr, tcfg.warmup_steps, tcfg.steps))
+        self.pipeline = TokenPipeline(DataConfig(
+            vocab_size=cfg.vocab_size, seq_len=tcfg.seq_len,
+            global_batch=tcfg.global_batch, seed=tcfg.seed))
+        self.step_idx = 0
+        self.history: list[dict] = []
+
+        state, axes = init_train_state(cfg, self.opt,
+                                       jax.random.key(tcfg.seed))
+        self.state_shardings = None
+        if mesh is not None:
+            psh = sh.param_shardings(mesh, state["params"], axes,
+                                     sh.TRAIN_RULES)
+            self.state_shardings = {
+                "params": psh,
+                "opt": {"m": psh, "v": psh, "step": sh.replicated(mesh)},
+            }
+            sh.install_activation_rules(mesh)
+            state = jax.device_put(state, self.state_shardings)
+        self.state = state
+
+        # ---- resume-from-latest (fault tolerance) ----
+        latest = ckpt.latest_step(tcfg.ckpt_dir)
+        if latest is not None:
+            self.step_idx, tree = ckpt.restore_checkpoint(
+                tcfg.ckpt_dir, latest, shardings=self.state_shardings)
+            self.state = jax.tree.map(
+                lambda cur, new: jax.numpy.asarray(new, cur.dtype)
+                if self.mesh is None else new, self.state, tree)
+
+        step_fn = make_train_step(cfg, self.opt)
+        if mesh is not None:
+            self._step = jax.jit(
+                step_fn, in_shardings=(self.state_shardings, None),
+                out_shardings=(self.state_shardings, None),
+                donate_argnums=(0,))
+        else:
+            self._step = jax.jit(step_fn, donate_argnums=(0,))
+
+    # ------------------------------------------------------------------
+    def run(self, steps: Optional[int] = None) -> list[dict]:
+        target = self.tcfg.steps if steps is None else self.step_idx + steps
+        ctx = self.mesh or _nullcontext()
+        with ctx:
+            while self.step_idx < target:
+                batch = self.pipeline.batch(self.step_idx)
+                batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+                t0 = time.time()
+                self.state, metrics = self._step(self.state, batch)
+                metrics = {k: float(v) for k, v in metrics.items()}
+                metrics["step"] = self.step_idx
+                metrics["wall_s"] = time.time() - t0
+                self.history.append(metrics)
+                self.step_idx += 1
+                if self.step_idx % self.tcfg.log_every == 0:
+                    print(f"step {self.step_idx:5d} "
+                          f"loss {metrics['loss']:.4f} "
+                          f"gnorm {metrics['grad_norm']:.3f} "
+                          f"lr {metrics['lr']:.2e}")
+                if self.step_idx % self.tcfg.ckpt_every == 0:
+                    self.save()
+        return self.history
+
+    def save(self):
+        ckpt.save_checkpoint(self.tcfg.ckpt_dir, self.step_idx, self.state)
+
+    def loss_curve(self):
+        return [m["loss"] for m in self.history]
+
+
+class _nullcontext:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False

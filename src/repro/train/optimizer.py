@@ -1,0 +1,94 @@
+"""Pure-JAX optimizers + LR schedules (no optax dependency).
+
+AdamW with global-norm clipping; schedules include cosine and the WSD
+(warmup-stable-decay) schedule that minicpm-2b trains with (arXiv:2404.06395)
+— WSD is selectable per arch via configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+# -- schedules ---------------------------------------------------------------
+
+def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
+                    min_ratio: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0, 1)
+        cos = peak_lr * (min_ratio + (1 - min_ratio)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return lr
+
+
+def wsd_schedule(peak_lr: float, warmup_steps: int, stable_steps: int,
+                 decay_steps: int, min_ratio: float = 0.01) -> Callable:
+    """Warmup-Stable-Decay (minicpm): linear warmup, long plateau, sharp
+    exponential-style decay tail."""
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        in_decay = step - (warmup_steps + stable_steps)
+        frac = jnp.clip(in_decay / jnp.maximum(decay_steps, 1), 0, 1)
+        decay = peak_lr * (min_ratio ** frac)
+        out = jnp.where(step < warmup_steps, warm,
+                        jnp.where(in_decay < 0, peak_lr, decay))
+        return out
+    return lr
+
+
+# -- AdamW ---------------------------------------------------------------
+
+@dataclass(frozen=True)
+class AdamW:
+    schedule: Callable
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads, opt_state, params):
+        step = opt_state["step"] + 1
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+        m = jax.tree.map(lambda m_, g: self.b1 * m_ + (1 - self.b1) * g,
+                         opt_state["m"], grads)
+        v = jax.tree.map(lambda v_, g: self.b2 * v_ + (1 - self.b2) * g * g,
+                         opt_state["v"], grads)
+        bc1 = 1 - self.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** step.astype(jnp.float32)
+        lr = self.schedule(step)
+
+        def upd(p, m_, v_):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"m": m, "v": v, "step": step}, \
+            {"grad_norm": gnorm, "lr": lr}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))

@@ -1,0 +1,61 @@
+"""Step-function builders used by both the trainer and the dry-run.
+
+make_train_step : (state, batch) -> (state, metrics), state = params + opt
+make_prefill_step / make_decode_step : the two serving lowerings.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import api
+from repro.train.optimizer import AdamW
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamW) -> Callable:
+    def train_step(state, batch):
+        def loss(params):
+            return api.loss_fn(params, cfg, batch)
+
+        (_, metrics), grads = jax.value_and_grad(loss, has_aux=True)(
+            state["params"])
+        new_params, new_opt, opt_metrics = opt.update(
+            grads, state["opt"], state["params"])
+        metrics.update(opt_metrics)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    def prefill_step(params, batch):
+        return api.prefill_fn(params, cfg, batch)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    def decode_step(params, tokens, cache, pos):
+        return api.decode_fn(params, cfg, tokens, cache, pos)
+
+    return decode_step
+
+
+def init_train_state(cfg: ModelConfig, opt: AdamW, key=None,
+                     abstract: bool = False):
+    """Returns (state, state_axes-ish shardings info) where state =
+    {params, opt{m,v,step}}. In abstract mode everything is SDS."""
+    params, axes = api.init_params(cfg, key, abstract=abstract)
+    if abstract:
+        f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+        opt_state = {
+            "m": jax.tree.map(f32, params),
+            "v": jax.tree.map(f32, params),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+    else:
+        opt_state = opt.init(params)
+    return {"params": params, "opt": opt_state}, axes

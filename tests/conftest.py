@@ -1,0 +1,19 @@
+import os
+
+# keep the default single-device backend for tests; the multi-pod dry-run
+# (and ONLY it) forces 512 host devices in its own process
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.key(0)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

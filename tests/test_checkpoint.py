@@ -1,0 +1,67 @@
+"""Checkpoint atomicity / integrity / GC."""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed import checkpoint as ckpt
+
+
+def tree():
+    return {"params": {"w": jnp.arange(12.0).reshape(3, 4),
+                       "b": jnp.ones((4,), jnp.bfloat16)},
+            "opt": {"step": jnp.int32(7)}}
+
+
+def test_roundtrip_preserves_shapes_dtypes(tmp_path):
+    t = tree()
+    ckpt.save_checkpoint(tmp_path, 7, t)
+    step, r = ckpt.restore_checkpoint(tmp_path)
+    assert step == 7
+    assert r["params"]["w"].shape == (3, 4)
+    assert str(r["params"]["b"].dtype) == "bfloat16"
+    np.testing.assert_array_equal(np.asarray(t["params"]["w"]),
+                                  r["params"]["w"])
+    assert int(r["opt"]["step"]) == 7
+
+
+def test_corruption_detected(tmp_path):
+    ckpt.save_checkpoint(tmp_path, 1, tree())
+    victim = next((tmp_path / "step_0000000001").glob("params.w.npy"))
+    raw = bytearray(victim.read_bytes())
+    raw[-1] ^= 0xFF
+    victim.write_bytes(bytes(raw))
+    with pytest.raises(IOError):
+        ckpt.restore_checkpoint(tmp_path, 1)
+
+
+def test_half_written_checkpoint_is_invisible(tmp_path):
+    ckpt.save_checkpoint(tmp_path, 1, tree())
+    # a crashed writer leaves a temp dir: restore must ignore it
+    broken = tmp_path / ".tmp_step_0000000002_999"
+    broken.mkdir()
+    (broken / "params.w.npy").write_bytes(b"garbage")
+    assert ckpt.latest_step(tmp_path) == 1
+    step, _ = ckpt.restore_checkpoint(tmp_path)
+    assert step == 1
+    # likewise a published dir without manifest (older partial semantics)
+    nomanifest = tmp_path / "step_0000000003"
+    nomanifest.mkdir()
+    assert ckpt.latest_step(tmp_path) == 1
+
+
+def test_gc_keeps_latest(tmp_path):
+    for s in range(6):
+        ckpt.save_checkpoint(tmp_path, s, tree(), keep=3)
+    steps = sorted(int(p.name.split("_")[1])
+                   for p in tmp_path.glob("step_*"))
+    assert steps == [3, 4, 5]
+
+
+def test_manifest_records_hashes(tmp_path):
+    d = ckpt.save_checkpoint(tmp_path, 2, tree())
+    man = json.loads((d / "manifest.json").read_text())
+    assert set(man["leaves"]) == {"params.w", "params.b", "opt.step"}
+    for meta in man["leaves"].values():
+        assert len(meta["sha256"]) == 64

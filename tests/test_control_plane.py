@@ -1,0 +1,194 @@
+"""Control-plane behaviour: the paper's §3 flows end-to-end on the event
+loop — spin-up, auth, routing, port assignment, health, autoscaling,
+node-failure reconvergence, and DB consistency throughout."""
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.config import GPU_H100, GPU_L40S
+from repro.core.autoscaler import AlertRule
+from repro.core.controller import ClusterSpec, ControlPlane
+from repro.core.db import Database
+from repro.core.services import BASE_PORT
+from repro.core.web_gateway import (MODEL_NOT_READY, MODEL_UNKNOWN, OK,
+                                    UNAUTHENTICATED)
+from repro.engine.request import Request, SamplingParams
+
+MODEL = "mistral-small-24b"
+
+
+def mk_plane(**kw):
+    spec = ClusterSpec(num_nodes=kw.pop("num_nodes", 4),
+                       gpus_per_node=kw.pop("gpus_per_node", 2),
+                       max_num_seqs=16, num_blocks=512, block_size=16,
+                       max_model_len=2048, **kw)
+    cp = ControlPlane(spec)
+    cp.add_tenant("uni", "sk-test")
+    return cp
+
+
+def req(n=16, out=4):
+    return Request(prompt_tokens=[1] * n,
+                   sampling=SamplingParams(target_output_len=out,
+                                           max_new_tokens=out))
+
+
+# ---------------------------------------------------------------------------
+
+def test_lifecycle_and_status_codes():
+    cp = mk_plane()
+    cp.add_model(configs.get(MODEL), instances=1, est_load_time=60.0)
+    assert cp.web_gateway.handle("sk-test", MODEL, req()) == MODEL_NOT_READY
+    assert cp.web_gateway.handle("bad-key", MODEL, req()) == UNAUTHENTICATED
+    assert cp.web_gateway.handle("sk-test", "nope", req()) == MODEL_UNKNOWN
+    cp.run_until(120.0)
+    assert len(cp.ready_endpoints(MODEL)) == 1
+    r = req()
+    assert cp.web_gateway.handle("sk-test", MODEL, r) == OK
+    cp.run_until(cp.loop.now + 60.0)
+    assert r.status.value == "finished"
+    cp.db.check_invariants()
+
+
+def test_auth_cache_reduces_db_trips():
+    cp = mk_plane()
+    cp.add_model(configs.get(MODEL), instances=1, est_load_time=30.0)
+    cp.run_until(90.0)
+    for _ in range(10):
+        cp.web_gateway.handle("sk-test", MODEL, req())
+    # 1 auth db trip (first), 10 endpoint lookups
+    assert cp.web_gateway.stats.cache_hits == 9
+    assert cp.web_gateway.stats.db_trips == 1 + 10
+
+
+def test_port_assignment_argmax_plus_one():
+    cp = mk_plane(num_nodes=1, gpus_per_node=4)
+    cp.add_model(configs.get(MODEL), instances=3, est_load_time=5.0,
+                 gpus_per_node=1)
+    cp.run_until(200.0)
+    eps = cp.db["ai_model_endpoints"].select(node="node000")
+    ports = sorted(e["port"] for e in eps)
+    assert ports == [BASE_PORT, BASE_PORT + 1, BASE_PORT + 2]
+    cp.db.check_invariants()
+
+
+def test_round_robin_across_instances():
+    cp = mk_plane()
+    cp.add_model(configs.get(MODEL), instances=2, est_load_time=10.0)
+    cp.run_until(120.0)
+    assert len(cp.ready_endpoints(MODEL)) == 2
+    for _ in range(6):
+        cp.web_gateway.handle("sk-test", MODEL, req(out=2))
+    cp.run_until(cp.loop.now + 60.0)
+    loads = [i.engine.metrics.requests_finished
+             for i in cp.registry.values()]
+    assert sorted(loads) == [3, 3], loads
+
+
+def test_job_worker_scales_down():
+    cp = mk_plane()
+    cp.add_model(configs.get(MODEL), instances=3, est_load_time=5.0)
+    cp.run_until(200.0)
+    assert len(cp.ready_endpoints(MODEL)) == 3
+    cp.db["ai_model_configurations"].update(1, instances=1)
+    cp.run_until(cp.loop.now + 120.0)
+    assert len(cp.ready_endpoints(MODEL)) == 1
+    cp.db.check_invariants()
+
+
+def test_node_failure_reconverges():
+    cp = mk_plane()
+    cp.add_model(configs.get(MODEL), instances=2, est_load_time=10.0)
+    cp.run_until(150.0)
+    victim = cp.ready_endpoints(MODEL)[0]["node"]
+    cp.slurm.fail_node(victim)
+    cp.run_until(cp.loop.now + 15.0)
+    live_nodes = {e["node"] for e in cp.ready_endpoints(MODEL)}
+    assert victim not in live_nodes          # endpoint worker reaped it
+    cp.run_until(cp.loop.now + 150.0)
+    assert len(cp.ready_endpoints(MODEL)) == 2   # job worker respawned
+    cp.db.check_invariants()
+
+
+def test_startup_timeout_cancels_job():
+    cp = mk_plane(startup_timeout=40.0)
+    # load time far exceeds the (shortened) 30-minute-analogue timeout
+    cp.add_model(configs.get(MODEL), instances=1, est_load_time=10_000.0)
+    cp.run_until(300.0)
+    # job should have been scancel'd + rows reaped + resubmitted (and the
+    # replacement also times out — so there are never READY endpoints but
+    # also never orphan rows)
+    assert len(cp.ready_endpoints(MODEL)) == 0
+    cp.db.check_invariants()
+    for job in cp.db["ai_model_endpoint_jobs"].rows.values():
+        assert cp.loop.now - job["submitted_at"] < 60.0
+
+
+def test_autoscaler_fires_and_converges():
+    rules = [AlertRule("qt", "queue_time_max", "gt", 5.0, 30.0, +1,
+                       cooldown=45.0)]
+    spec = ClusterSpec(num_nodes=6, gpus_per_node=2, hardware=GPU_L40S,
+                       max_num_seqs=8, num_blocks=256, block_size=16,
+                       max_model_len=2048, max_instances=4)
+    cp = ControlPlane(spec, alert_rules=rules)
+    cp.add_tenant("uni", "sk-test")
+    cp.add_model(configs.get(MODEL), instances=1, gpus_per_node=2,
+                 est_load_time=30.0)
+    cp.run_until(90.0)
+    rng = np.random.default_rng(0)
+
+    def inject(now):
+        for _ in range(20):
+            r = Request(prompt_tokens=list(rng.integers(1, 1000, size=300)),
+                        sampling=SamplingParams(target_output_len=60,
+                                                max_new_tokens=60))
+            cp.web_gateway.handle("sk-test", MODEL, r)
+    for t in range(90, 300, 5):
+        cp.loop.call_at(float(t), lambda: inject(cp.loop.now))
+    cp.run_until(450.0)
+    assert cp.metrics_gateway.scale_events, "autoscaler never fired"
+    assert len(cp.ready_endpoints(MODEL)) > 1
+    cp.db.check_invariants()
+
+
+def test_prometheus_service_discovery_shape():
+    cp = mk_plane()
+    cp.add_model(configs.get(MODEL), instances=1, est_load_time=10.0)
+    cp.run_until(90.0)
+    targets = cp.metrics_gateway.prometheus_targets()
+    assert len(targets) == 1
+    t = targets[0]
+    assert t["targets"][0].startswith("node")
+    assert t["labels"]["model"] == MODEL
+    assert t["labels"]["slurm_job_id"]
+
+
+# ---------------------------------------------------------------------------
+# database schema semantics
+# ---------------------------------------------------------------------------
+
+def test_db_fk_violation_raises():
+    db = Database()
+    with pytest.raises(ValueError):
+        db["ai_model_endpoint_jobs"].insert(db, configuration_id=42)
+
+
+def test_db_cascade_delete():
+    db = Database()
+    c = db["ai_model_configurations"].insert(db, model_name="m",
+                                             instances=1)
+    j = db["ai_model_endpoint_jobs"].insert(db, configuration_id=c["id"])
+    e = db["ai_model_endpoints"].insert(db, endpoint_job_id=j["id"],
+                                        node="n", port=8000)
+    db["ai_model_endpoint_jobs"].delete(db, j["id"])
+    assert db["ai_model_endpoints"].get(e["id"]) is None
+    db.check_invariants()
+
+
+def test_db_auth_stores_hash_not_plaintext():
+    db = Database()
+    db.create_tenant("uni", "sk-secret")
+    rows = list(db["identity_tenant_authentications"].rows.values())
+    assert "sk-secret" not in str(rows)
+    assert db.authenticate("sk-secret")["name"] == "uni"
+    assert db.authenticate("sk-wrong") is None

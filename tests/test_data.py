@@ -1,0 +1,43 @@
+"""Workload synthesis + Table-1 harness statistics."""
+import numpy as np
+
+from repro.data.burstgpt import bursty_poisson, concurrent_burst
+
+
+def test_concurrent_burst_matches_trace_totals():
+    for n in (100, 500, 1000):
+        w = concurrent_burst(n, seed=0)
+        total_in = sum(r.prompt_len for r in w.requests)
+        # paper Table 1 totals: 77561 / 381456 / 768960
+        target = {100: 77_561, 500: 381_456, 1000: 768_960}[n]
+        assert abs(total_in - target) / target < 0.02, (n, total_in)
+        assert all(a == 0.0 for a in w.arrivals)
+
+
+def test_concurrent_burst_deterministic_by_seed():
+    a = concurrent_burst(50, seed=0)
+    b = concurrent_burst(50, seed=0)
+    c = concurrent_burst(50, seed=1)
+    assert [r.prompt_tokens for r in a.requests] == \
+        [r.prompt_tokens for r in b.requests]
+    assert [r.prompt_tokens for r in a.requests] != \
+        [r.prompt_tokens for r in c.requests]
+
+
+def test_shared_prefix_structure():
+    w = concurrent_burst(40, seed=0, shared_fraction=0.9)
+    reqs = sorted(w.requests, key=lambda r: r.prompt_len)
+    a, b = reqs[-1].prompt_tokens, reqs[-2].prompt_tokens
+    shared = 0
+    for x, y in zip(a, b):
+        if x != y:
+            break
+        shared += 1
+    assert shared >= 0.5 * min(len(a), len(b))
+
+
+def test_bursty_poisson_rate():
+    w = bursty_poisson(rate=10.0, duration=200.0, seed=0)
+    assert 0.7 < len(w.requests) / 2000.0 < 1.3
+    assert all(0 <= t < 200.0 for t in w.arrivals)
+    assert w.arrivals == sorted(w.arrivals)

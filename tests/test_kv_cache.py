@@ -1,0 +1,134 @@
+"""Property-based tests (hypothesis) for the paged-KV control plane —
+the invariants a 1000-node deployment lives or dies by."""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.engine.kv_cache import (BlockAllocator, OutOfBlocks, SequenceKV,
+                                   chain_hash)
+
+
+# ---------------------------------------------------------------------------
+# allocator invariants under arbitrary alloc/free/fork interleavings
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "free", "fork"]),
+                          st.integers(0, 63)), max_size=200),
+       st.integers(4, 64))
+def test_allocator_never_leaks_or_double_frees(ops, num_blocks):
+    alloc = BlockAllocator(num_blocks, 16, enable_prefix_caching=False)
+    held: list[int] = []
+    for op, arg in ops:
+        if op == "alloc":
+            try:
+                held.append(alloc.allocate())
+            except OutOfBlocks:
+                assert alloc.num_free() == 0
+        elif op == "free" and held:
+            alloc.free(held.pop(arg % len(held)))
+        elif op == "fork" and held:
+            idx = held[arg % len(held)]
+            alloc.fork(idx)
+            held.append(idx)
+        alloc.check_invariants()
+    for idx in held:
+        alloc.free(idx)
+    alloc.check_invariants()
+    assert alloc.num_free() == num_blocks
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.integers(1, 40), min_size=1, max_size=12),
+       st.integers(2, 8))
+def test_sequence_blocks_match_token_count(appends, block_size):
+    alloc = BlockAllocator(4096, block_size, enable_prefix_caching=False)
+    seq = SequenceKV(alloc)
+    total = 0
+    for n in appends:
+        seq.append_tokens(n)
+        total += n
+        assert seq.num_tokens == total
+        assert seq.num_blocks == -(-total // block_size)
+    seq.release()
+    alloc.check_invariants()
+    assert alloc.num_free() == 4096
+
+
+# ---------------------------------------------------------------------------
+# prefix caching: correctness of content-addressed reuse
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(2, 8), st.integers(0, 70), st.integers(0, 70),
+       st.integers(0, 1000))
+def test_prefix_match_covers_exactly_common_complete_blocks(
+        block_size, len_a, len_b, seed):
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    master = rng.integers(1, 100, size=128).tolist()
+    a = master[:len_a] + rng.integers(100, 200, size=4).tolist()
+    b = master[:len_b] + rng.integers(200, 300, size=4).tolist()
+
+    alloc = BlockAllocator(1024, block_size, enable_prefix_caching=True)
+    sa = SequenceKV(alloc)
+    assert sa.match_prefix(a) == 0          # cold cache
+    sa.append_tokens(len(a), token_ids=a)
+
+    sb = SequenceKV(alloc)
+    covered = sb.match_prefix(b)
+    common = 0
+    for x, y in zip(a, b):
+        if x != y:
+            break
+        common += 1
+    expect = min(common // block_size * block_size, len(b) - 1
+                 if (len(b) - 1) // block_size * block_size <= common else 0)
+    # covered tokens are a complete-block prefix of the common prefix and
+    # never include b's final token
+    assert covered % block_size == 0
+    assert covered <= common
+    assert covered <= len(b) - 1
+    # shared blocks must be the SAME physical blocks (ref-counted)
+    for i in range(covered // block_size):
+        assert sb.block_table[i] == sa.block_table[i]
+        assert alloc.blocks[sb.block_table[i]].ref_count == 2
+    sa.release()
+    sb.release()
+    alloc.check_invariants()
+
+
+def test_extend_match_leapfrogs_newly_sealed_blocks():
+    alloc = BlockAllocator(256, 4, enable_prefix_caching=True)
+    master = list(range(1, 41))
+    a = SequenceKV(alloc)
+    a.match_prefix(master)
+    b = SequenceKV(alloc)
+    b.match_prefix(master)          # cold: 0
+    assert b.num_tokens == 0
+    a.append_tokens(20, token_ids=master)   # seals 5 blocks
+    covered = b.extend_match(master)
+    assert covered == 20
+    assert b.block_table[:5] == a.block_table[:5]
+    # final-token guard: can never cover the whole prompt
+    c = SequenceKV(alloc)
+    a.append_tokens(20, token_ids=master)   # seal all 10 blocks
+    got = c.match_prefix(master)
+    assert got <= len(master) - 1
+    a.release(), b.release(), c.release()
+    alloc.check_invariants()
+
+
+def test_evictable_blocks_are_reused_before_eviction():
+    alloc = BlockAllocator(4, 4, enable_prefix_caching=True)
+    s = SequenceKV(alloc)
+    toks = [1, 2, 3, 4, 5, 6, 7, 8]
+    s.append_tokens(8, token_ids=toks)
+    s.release()                      # sealed blocks go to evictable pool
+    s2 = SequenceKV(alloc)
+    assert s2.match_prefix(toks + [9]) == 8   # warm hit after release
+    s2.release()
+    # allocating everything evicts the cached blocks instead of failing
+    held = [alloc.allocate() for _ in range(4)]
+    for h in held:
+        alloc.free(h)
+    alloc.check_invariants()

@@ -1,0 +1,45 @@
+"""Discrete-event loop semantics."""
+import pytest
+
+from repro.core.simclock import EventLoop
+
+
+def test_ordering_and_ties():
+    loop = EventLoop()
+    seen = []
+    loop.call_at(2.0, lambda: seen.append("b"))
+    loop.call_at(1.0, lambda: seen.append("a"))
+    loop.call_at(2.0, lambda: seen.append("c"))   # tie: insertion order
+    loop.run_until(3.0)
+    assert seen == ["a", "b", "c"]
+    assert loop.now == 3.0
+
+
+def test_periodic_and_cancel():
+    loop = EventLoop()
+    ticks = []
+    loop.every(1.0, lambda now: ticks.append(now))
+    ev = loop.call_at(2.5, lambda: ticks.append("X"))
+    loop.cancel(ev)
+    loop.run_until(5.0)
+    assert ticks == [1.0, 2.0, 3.0, 4.0, 5.0]
+
+
+def test_events_scheduled_in_past_run_now():
+    loop = EventLoop()
+    loop.run_until(10.0)
+    seen = []
+    loop.call_at(3.0, lambda: seen.append(loop.now))
+    loop.run_until(10.5)
+    assert seen == [10.0]
+
+
+def test_livelock_guard():
+    loop = EventLoop()
+
+    def rearm():
+        loop.call_after(0.0, rearm)
+
+    loop.call_after(0.0, rearm)
+    with pytest.raises(RuntimeError):
+        loop.run_until(1.0, max_events=1000)

@@ -1,25 +1,37 @@
 """Autoscaling trace benchmark (paper §3.3): bursty open-loop load against
 one instance; the queue-time rule (>5 s sustained 30 s) must fire, the Job
-Worker must converge, and post-scale queue time must drop."""
+Worker must converge, and post-scale queue time must drop.
+
+`run()` accepts a routing `policy` and router-side queue knobs so the
+scale-up dynamics can be compared across gateway configurations
+(`run_policy_comparison()` sweeps all four policies); with
+`queue_capacity > 0`, requests arriving before the first instance is ready
+are held and drained instead of bouncing off 461."""
 from __future__ import annotations
 
 import numpy as np
 
 from repro import configs
-from repro.config import GPU_L40S
+from repro.config import GPU_L40S, ServiceConfig
 from repro.core.controller import ClusterSpec, ControlPlane
+from repro.core.router import POLICIES
 from repro.data.burstgpt import bursty_poisson
 
 MODEL = "mistral-small-24b"
 
 
-def run(duration: float = 420.0, rate: float = 5.0, seed: int = 0) -> dict:
+def run(duration: float = 420.0, rate: float = 5.0, seed: int = 0,
+        policy: str = "round_robin", queue_capacity: int = 0,
+        queue_ttl: float = 30.0) -> dict:
     from repro.engine.engine import LLMEngine
     from repro.engine.executor import SimExecutor
 
     spec = ClusterSpec(num_nodes=6, gpus_per_node=2, hardware=GPU_L40S,
                        max_num_seqs=8, num_blocks=512, block_size=16,
-                       max_model_len=8192, max_instances=6)
+                       max_model_len=8192, max_instances=6,
+                       services=ServiceConfig(routing_policy=policy,
+                                              queue_capacity=queue_capacity,
+                                              queue_ttl=queue_ttl))
 
     def factory(cfg, tp):
         ex = SimExecutor(cfg, GPU_L40S, tp=2, efficiency=0.5)
@@ -54,6 +66,7 @@ def run(duration: float = 420.0, rate: float = 5.0, seed: int = 0) -> dict:
     return {
         "requests": len(wl.requests),
         "finished": finished,
+        "policy": policy,
         "scale_events": len(cp.metrics_gateway.scale_events),
         "first_scale_at_s": (cp.metrics_gateway.scale_events[0][0] - t0
                              if cp.metrics_gateway.scale_events else None),
@@ -61,4 +74,25 @@ def run(duration: float = 420.0, rate: float = 5.0, seed: int = 0) -> dict:
         "queue_time_peak_s": max((v for _, v in qt), default=0.0),
         "queue_time_peak_before_scale_s": peak_before,
         "queue_time_tail_s": float(np.mean(tail)) if tail else 0.0,
+        "router": cp.web_gateway.router_stats(),
     }
+
+
+def run_policy_comparison(duration: float = 420.0, rate: float = 5.0,
+                          seed: int = 0) -> list[dict]:
+    """Same bursty trace under each routing policy (queue enabled)."""
+    rows = []
+    for policy in POLICIES:
+        row = run(duration, rate, seed=seed, policy=policy,
+                  queue_capacity=64, queue_ttl=60.0)
+        rows.append(row)
+        print(f"{policy:17s} finished={row['finished']:4d}/{row['requests']}"
+              f"  scale_events={row['scale_events']}"
+              f"  qt_peak={row['queue_time_peak_s']:6.1f}s"
+              f"  qt_tail={row['queue_time_tail_s']:6.2f}s"
+              f"  instances={row['final_instances']}")
+    return rows
+
+
+if __name__ == "__main__":
+    run_policy_comparison()

@@ -65,8 +65,10 @@ class ClientRecorder:
             "completed": len(recs),
             "duration_s": dur,
             "e2el_median_ms": float(np.median(e2el) * 1e3),
+            "e2el_p99_ms": float(np.percentile(e2el, 99) * 1e3),
             "e2el_std_ms": float(np.std(e2el) * 1e3),
             "ttft_median_ms": float(np.median(ttft) * 1e3),
+            "ttft_p99_ms": float(np.percentile(ttft, 99) * 1e3),
             "ttft_std_ms": float(np.std(ttft) * 1e3),
             "tpot_median_ms": float(np.median(tpot) * 1e3) if len(tpot) else 0,
             "tpot_std_ms": float(np.std(tpot) * 1e3) if len(tpot) else 0,

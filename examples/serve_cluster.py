@@ -5,6 +5,12 @@ A bursty diurnal-ish load hits one Mistral-24B instance; the Grafana rule
 jobs, load drains; when the burst passes, the idle scale-down rule returns
 capacity to the research partition (the paper's off-hours goal).
 
+The gateway runs the least-loaded routing policy with router-side request
+queuing enabled: requests that arrive before the first instance finishes
+loading are parked in the gateway queue (status 202) and drained the moment
+the Endpoint Worker flips the endpoint to ready — and the queued backlog
+itself counts toward the scale-up signal.
+
     PYTHONPATH=src python examples/serve_cluster.py
 """
 import sys
@@ -14,9 +20,9 @@ sys.path.insert(0, "src")
 import numpy as np
 
 from repro import configs
-from repro.config import GPU_L40S
+from repro.config import GPU_L40S, ServiceConfig
 from repro.core.controller import ClusterSpec, ControlPlane
-from repro.core.autoscaler import AlertRule
+from repro.core.autoscaler import AlertRule, GATEWAY_QUEUE_SCALE_UP
 from repro.data.burstgpt import bursty_poisson
 
 MODEL = "mistral-small-24b"
@@ -26,17 +32,23 @@ def main():
     rules = [
         AlertRule("queue_time>5s_for_30s", "queue_time_max", "gt", 5.0,
                   30.0, +1, cooldown=60.0),
+        GATEWAY_QUEUE_SCALE_UP,
         AlertRule("idle_scale_down", "kv_util_avg", "lt", 0.02, 120.0, -1,
                   cooldown=120.0),
     ]
     spec = ClusterSpec(num_nodes=8, gpus_per_node=2, hardware=GPU_L40S,
                        max_num_seqs=8, num_blocks=512, block_size=16,
-                       max_model_len=8192, max_instances=6)
+                       max_model_len=8192, max_instances=6,
+                       services=ServiceConfig(routing_policy="least_loaded",
+                                              queue_capacity=128,
+                                              queue_ttl=90.0))
     cp = ControlPlane(spec, alert_rules=rules)
     cp.add_tenant("uni", "sk-cluster")
     cp.add_model(configs.get(MODEL), instances=1, gpus_per_node=2,
                  est_load_time=45.0)
-    cp.run_until(90.0)
+    # no warm-up wait: the earliest requests hit the gateway while the
+    # first instance is still loading and ride the router-side queue
+    cp.run_until(10.0)
     t0 = cp.loop.now
 
     # 6-minute burst at ~6 req/s, then quiet for scale-down
@@ -62,6 +74,9 @@ def main():
     fin = sum(1 for r in wl.requests if r.status.value == "finished")
     print(f"\nfinished {fin}/{len(wl.requests)} requests; "
           f"final instances: {len(cp.ready_endpoints(MODEL))}")
+    rs = cp.web_gateway.router_stats()
+    print(f"router policy={rs['policy']}  picks={rs['picks']}")
+    print(f"gateway queue: {rs['queue']}")
 
 
 if __name__ == "__main__":

@@ -172,6 +172,24 @@ class ModelConfig:
 
 
 @dataclass(frozen=True)
+class ServiceConfig:
+    """Control-plane service knobs (paper §3.1–3.3 plus the routing and
+    queuing extensions from the production-stack proposals).
+
+    routing_policy selects the Web Gateway's endpoint-selection strategy
+    (see repro.core.router.POLICIES). queue_capacity > 0 enables bounded
+    router-side request queuing: requests that would be rejected 461 are
+    held up to queue_ttl seconds and drained when an instance comes up.
+    """
+    routing_policy: str = "round_robin"
+    affinity_replicas: int = 64        # virtual nodes per endpoint (ring)
+    prefix_tokens: int = 32            # prefix-aware grouping key length
+    queue_capacity: int = 0            # 0 = disabled (seed behaviour)
+    queue_ttl: float = 30.0            # seconds before a queued req expires
+    queue_drain_interval: float = 1.0  # periodic expiry/drain tick
+
+
+@dataclass(frozen=True)
 class ShapeConfig:
     """One benchmark cell: an input shape + which step it lowers."""
     name: str

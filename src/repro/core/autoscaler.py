@@ -39,6 +39,14 @@ IDLE_SCALE_DOWN = AlertRule(
     name="idle_kv<2%_for_300s", metric="kv_util_avg", op="lt",
     threshold=0.02, for_duration=300.0, delta=-1, cooldown=300.0)
 
+# beyond-paper: requests parked in the Web Gateway's router-side queue are
+# demand no engine can report (there may be zero live instances); sustained
+# gateway backlog triggers scale-up just like engine queue time. Inert
+# unless ServiceConfig.queue_capacity > 0 (gateway_queued is then scraped).
+GATEWAY_QUEUE_SCALE_UP = AlertRule(
+    name="gateway_queue>0_for_15s", metric="gateway_queued", op="gt",
+    threshold=0.5, for_duration=15.0, delta=+1, cooldown=60.0)
+
 
 class Autoscaler:
     """Evaluates alert rules over the scrape history and fires the Grafana
@@ -50,7 +58,8 @@ class Autoscaler:
         self.gw = gw
         self.loop = loop
         self.rules = rules if rules is not None \
-            else [QUEUE_TIME_SCALE_UP, IDLE_SCALE_DOWN]
+            else [QUEUE_TIME_SCALE_UP, GATEWAY_QUEUE_SCALE_UP,
+                  IDLE_SCALE_DOWN]
         # (config_id, rule name) -> breach start time
         self._pending: dict[tuple, float] = {}
         self._last_fired: dict[tuple, float] = {}

@@ -13,7 +13,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
-from repro.config import GPU_H100, HardwareConfig, ModelConfig
+from repro.config import (GPU_H100, HardwareConfig, ModelConfig,
+                          ServiceConfig)
 from repro.core.autoscaler import Autoscaler, AlertRule
 from repro.core.db import Database
 from repro.core.instance import VLLMInstance
@@ -47,6 +48,8 @@ class ClusterSpec:
     max_prefill_tokens: int = 2048
     max_model_len: int = 8192
     max_instances: int = 8
+    # gateway routing policy + router-side queuing knobs
+    services: ServiceConfig = field(default_factory=ServiceConfig)
 
 
 class ControlPlane:
@@ -82,7 +85,13 @@ class ControlPlane:
         self.autoscaler = Autoscaler(self.metrics_gateway, self.loop,
                                      rules=alert_rules,
                                      eval_interval=self.spec.autoscaler_interval)
-        self.web_gateway = WebGateway(self.db, self.loop, self.registry)
+        self.web_gateway = WebGateway(
+            self.db, self.loop, self.registry,
+            services=self.spec.services,
+            load_fn=self.metrics_gateway.endpoint_load)
+        # queued gateway demand feeds the scrape; fresh endpoints drain it
+        self.metrics_gateway.attach_web_gateway(self.web_gateway)
+        self.endpoint_worker.on_ready = self.web_gateway.notify_ready
 
     # ------------------------------------------------------------------
     def add_tenant(self, name: str, api_key: str):

@@ -29,8 +29,22 @@ class MetricsGateway:
         self.max_instances = max_instances
         # (config_id) -> deque[(t, aggregated metrics dict)]
         self.history: dict[int, deque] = defaultdict(deque)
+        # (node, port) -> latest per-endpoint scrape (least-loaded routing)
+        self.endpoint_metrics: dict[tuple, dict] = {}
         self.scale_events: list[tuple] = []   # (t, config_id, delta, reason)
+        self.web_gateway = None               # set via attach_web_gateway
         loop.every(scrape_interval, self.scrape)
+
+    def attach_web_gateway(self, gw):
+        """Lets the scrape fold the gateway's queued-request depth into the
+        per-config aggregates (queued demand counts toward scale-up)."""
+        self.web_gateway = gw
+
+    def endpoint_load(self, key: tuple) -> dict:
+        """Latest scrape snapshot for one endpoint (node, port); {} if the
+        endpoint has not been scraped yet. Injected into load-aware
+        routing policies as their `load_fn`."""
+        return self.endpoint_metrics.get(key, {})
 
     # -- Prometheus HTTP service discovery --------------------------------
     def prometheus_targets(self) -> list[dict]:
@@ -55,35 +69,66 @@ class MetricsGateway:
     def scrape(self, now: float = None):
         now = self.loop.now if now is None else now
         per_config = defaultdict(list)
+        scraped_keys = set()
         for target in self.prometheus_targets():
             node, port = target["targets"][0].rsplit(":", 1)
             inst = self.registry.get((node, int(port)))
             if inst is None or not inst.alive:
                 continue
             snap = inst.metrics_snapshot()
+            self.endpoint_metrics[(node, int(port))] = snap
+            scraped_keys.add((node, int(port)))
             job = self.db["ai_model_endpoint_jobs"].get(
                 int(target["labels"]["endpoint_job_id"]))
             if job is None:
                 continue
             per_config[job["configuration_id"]].append(snap)
-        for cfg_id, snaps in per_config.items():
-            agg = {
-                "n": len(snaps),
-                "queue_time_max": max(s["queue_time"] for s in snaps),
-                "queue_time_min": min(s["queue_time"] for s in snaps),
-                "kv_util_avg": sum(s["kv_utilization"] for s in snaps)
-                / len(snaps),
-                "waiting_total": sum(s["num_waiting"] for s in snaps),
-                "running_total": sum(s["num_running"] for s in snaps),
-            }
-            h = self.history[cfg_id]
+        # drop snapshots of dead/decommissioned endpoints so load-aware
+        # routing never reads a dead instance's last queue depth (a fresh
+        # replacement may reuse the same node:port)
+        for key in list(self.endpoint_metrics):
+            if key not in scraped_keys:
+                del self.endpoint_metrics[key]
+        gw_queue = getattr(self.web_gateway, "queue", None)
+        for cfg in self.db["ai_model_configurations"].rows.values():
+            snaps = per_config.get(cfg["id"], [])
+            queued = gw_queue.depth(cfg["model_name"]) if gw_queue else 0
+            head_age = gw_queue.head_age(cfg["model_name"], now) \
+                if gw_queue else 0.0
+            if snaps:
+                agg = {
+                    "n": len(snaps),
+                    # queued gateway requests count toward the scale-up
+                    # signal: the queue head's age is queue time the paper's
+                    # rule would have seen inside an engine
+                    "queue_time_max": max(max(s["queue_time"] for s in snaps),
+                                          head_age),
+                    "queue_time_min": min(s["queue_time"] for s in snaps),
+                    "kv_util_avg": sum(s["kv_utilization"] for s in snaps)
+                    / len(snaps),
+                    "waiting_total": sum(s["num_waiting"] for s in snaps)
+                    + queued,
+                    "running_total": sum(s["num_running"] for s in snaps),
+                    "gateway_queued": queued,
+                }
+            elif queued:
+                # zero live instances but queued demand: emit a partial
+                # sample (no kv/running keys — series() skips them) so the
+                # autoscaler still sees the backlog
+                agg = {"n": 0, "queue_time_max": head_age,
+                       "waiting_total": queued, "gateway_queued": queued}
+            else:
+                continue
+            h = self.history[cfg["id"]]
             h.append((now, agg))
             while h and h[0][0] < now - self.history_window:
                 h.popleft()
 
     def series(self, config_id: int, metric: str, since: float) -> list[tuple]:
+        """History samples carrying `metric` (partial gateway-queue samples
+        omit engine metrics; those are skipped rather than zero-filled)."""
         return [(t, m[metric]) for t, m in self.history[config_id]
-                if t >= since]
+                if t >= since and metric in m]
 
     # -- Grafana contact-point webhook --------------------------------------
     def grafana_webhook(self, payload: dict) -> int:

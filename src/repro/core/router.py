@@ -1,0 +1,388 @@
+"""Pluggable gateway routing & load balancing (paper §3.1.2 extended).
+
+The paper's Web Gateway forwards each request to "a ready endpoint" without
+specifying a selection policy; the reference deployment uses a single
+round-robin cursor. This module extracts that decision into a
+`RoutingPolicy` interface with four implementations, mirroring the routing
+modes of the vLLM *production-stack* router proposals (see PAPERS.md):
+
+* `RoundRobin`       — the paper/seed behaviour; fair cursor over ready
+                       endpoints sorted by id (production-stack `roundrobin`).
+* `LeastLoaded`      — picks the endpoint with the lowest effective queue
+                       depth: the `num_waiting + num_running` reported by the
+                       last Metrics-Gateway scrape (§3.2.5) plus the requests
+                       this gateway has dispatched there since that scrape,
+                       tie-broken by KV-cache utilisation
+                       (production-stack `load_balancing_router` /
+                       TimeTrackingRouter proposals).
+* `SessionAffinity`  — consistent hashing on a session/tenant key so every
+                       turn of a multi-turn chat lands on the same instance
+                       and hits a warm KV cache (production-stack `session`
+                       routing; *Chat AI*, arXiv 2407.00110, pins sessions
+                       the same way).
+* `PrefixAware`      — routes requests that share a prompt prefix (first KV
+                       block) to the same instance so vLLM's prefix cache
+                       (on by default since v0.10) converts shared chat
+                       templates into block hits (production-stack
+                       `prefixaware` routing).
+
+It also provides `GatewayQueue`: bounded router-side request queuing with a
+TTL (production-stack `router-side-request-queuing` proposal). Instead of
+immediately answering 461 when a model has no ready endpoint, the gateway
+may hold requests and drain them when the controller brings an instance up;
+the queue depth and the age of its head are exported to the Metrics Gateway
+so queued requests count toward the autoscaler's scale-up signal (§3.3).
+"""
+from __future__ import annotations
+
+import bisect
+import hashlib
+import itertools
+from collections import OrderedDict, deque
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from repro.engine.request import Request
+
+
+def _stable_hash(key: str) -> int:
+    """Deterministic 64-bit hash (Python's builtin hash is salted)."""
+    return int.from_bytes(hashlib.blake2b(key.encode(), digest_size=8).digest(),
+                          "big")
+
+
+def endpoint_key(ep: dict) -> tuple:
+    return (ep["node"], ep["port"])
+
+
+# ---------------------------------------------------------------------------
+# policy interface
+# ---------------------------------------------------------------------------
+
+class RoutingPolicy:
+    """Selects one ready endpoint row for a request.
+
+    `select` receives the ready endpoint rows (non-empty) for the requested
+    model. Policies may keep per-endpoint state; `note_dispatch` /
+    `note_finish` bracket each forwarded request so load-aware policies can
+    track in-flight work between Metrics-Gateway scrapes.
+    """
+
+    name = "abstract"
+
+    def __init__(self):
+        self.picks: dict[tuple, int] = {}
+
+    def select(self, eps: list[dict], req: Request) -> dict:
+        raise NotImplementedError
+
+    def note_dispatch(self, ep: dict, req: Request):
+        self.picks[endpoint_key(ep)] = self.picks.get(endpoint_key(ep), 0) + 1
+
+    def note_finish(self, ep_key: tuple, req: Request):
+        pass
+
+    def stats(self) -> dict:
+        return {"policy": self.name,
+                "picks": {f"{n}:{p}": c for (n, p), c in self.picks.items()}}
+
+
+class RoundRobin(RoutingPolicy):
+    """Seed behaviour: fair cursor over endpoints sorted by row id."""
+
+    name = "round_robin"
+
+    def __init__(self):
+        super().__init__()
+        self._cursor = itertools.count()
+
+    def select(self, eps: list[dict], req: Request) -> dict:
+        eps = sorted(eps, key=lambda e: e["id"])
+        return eps[next(self._cursor) % len(eps)]
+
+
+class LeastLoaded(RoutingPolicy):
+    """Route to the endpoint with the smallest effective queue depth.
+
+    Effective depth = (num_waiting + num_running from the latest scrape)
+    + requests dispatched by this gateway since that scrape. The correction
+    term matters: scrapes run every ~5 s, and at 1000 concurrent requests a
+    stale scrape would send the whole burst to whichever instance looked
+    empty last scrape (the herd effect the production-stack proposal calls
+    out). Ties break on scraped KV utilisation, then row id.
+    """
+
+    name = "least_loaded"
+
+    def __init__(self, load_fn: Optional[Callable[[tuple], dict]] = None):
+        super().__init__()
+        # (node, port) -> scrape snapshot dict; injected by the gateway
+        self.load_fn = load_fn or (lambda key: {})
+        self._inflight: dict[tuple, int] = {}
+        self._since_scrape: dict[tuple, int] = {}
+        self._scrape_time: dict[tuple, float] = {}
+
+    def _depth(self, ep: dict) -> tuple:
+        key = endpoint_key(ep)
+        snap = self.load_fn(key) or {}
+        scraped = snap.get("num_waiting", 0) + snap.get("num_running", 0)
+        t = snap.get("time")
+        if t is None:
+            # never scraped: the gateway's own in-flight count is all we have
+            pending = self._inflight.get(key, 0)
+        else:
+            if t != self._scrape_time.get(key):
+                # new scrape observed: it already reflects earlier dispatches
+                self._scrape_time[key] = t
+                self._since_scrape[key] = 0
+            pending = self._since_scrape.get(key, 0)
+        return (scraped + pending, snap.get("kv_utilization", 0.0), ep["id"])
+
+    def select(self, eps: list[dict], req: Request) -> dict:
+        return min(eps, key=self._depth)
+
+    def note_dispatch(self, ep: dict, req: Request):
+        super().note_dispatch(ep, req)
+        key = endpoint_key(ep)
+        self._inflight[key] = self._inflight.get(key, 0) + 1
+        self._since_scrape[key] = self._since_scrape.get(key, 0) + 1
+
+    def note_finish(self, ep_key: tuple, req: Request):
+        if self._inflight.get(ep_key, 0) > 0:
+            self._inflight[ep_key] -= 1
+
+    def stats(self) -> dict:
+        out = super().stats()
+        out["inflight"] = {f"{n}:{p}": c
+                           for (n, p), c in self._inflight.items() if c}
+        return out
+
+
+class SessionAffinity(RoutingPolicy):
+    """Consistent hashing on the request's session key.
+
+    A hash ring with `replicas` virtual nodes per endpoint keeps most
+    sessions pinned when instances join/leave (only ~1/N of keys move on a
+    scale event), so multi-turn chats keep hitting a warm KV cache.
+    Requests without a session key fall back to round-robin.
+    """
+
+    name = "session_affinity"
+
+    def __init__(self, replicas: int = 64):
+        super().__init__()
+        self.replicas = replicas
+        self._fallback = RoundRobin()
+        self._ring_for: Optional[frozenset] = None
+        self._ring: list[int] = []
+        self._ring_eps: list[dict] = []
+        self.affinity_hits = 0
+        self.fallbacks = 0
+
+    def _build_ring(self, eps: list[dict]):
+        keys = frozenset(endpoint_key(e) for e in eps)
+        if keys == self._ring_for:
+            # endpoint set unchanged: refresh rows only (ids are stable)
+            by_key = {endpoint_key(e): e for e in eps}
+            self._ring_eps = [by_key[endpoint_key(e)] for e in self._ring_eps]
+            return
+        points = []
+        for ep in eps:
+            node, port = endpoint_key(ep)
+            for r in range(self.replicas):
+                points.append((_stable_hash(f"{node}:{port}#{r}"), ep))
+        points.sort(key=lambda x: x[0])
+        self._ring = [h for h, _ in points]
+        self._ring_eps = [e for _, e in points]
+        self._ring_for = keys
+
+    def select(self, eps: list[dict], req: Request) -> dict:
+        key = getattr(req, "session_id", None)
+        if key is None:
+            self.fallbacks += 1
+            return self._fallback.select(eps, req)
+        self._build_ring(eps)
+        h = _stable_hash(str(key))
+        i = bisect.bisect_right(self._ring, h) % len(self._ring)
+        self.affinity_hits += 1
+        return self._ring_eps[i]
+
+    def stats(self) -> dict:
+        out = super().stats()
+        out.update(affinity_hits=self.affinity_hits, fallbacks=self.fallbacks)
+        return out
+
+
+class PrefixAware(RoutingPolicy):
+    """Group requests sharing a prompt prefix onto the same instance.
+
+    The grouping key is the first `prefix_tokens` prompt tokens (one KV
+    block at the engine's default block size) — exactly the granularity at
+    which vLLM's prefix cache can reuse blocks. First sight of a prefix
+    picks the least-loaded endpoint (when load data is available) so hot
+    prefixes don't all pile onto instance 0; later requests stick. The map
+    is a bounded LRU so a long-running gateway cannot leak.
+    """
+
+    name = "prefix_aware"
+
+    def __init__(self, prefix_tokens: int = 32, max_entries: int = 4096,
+                 load_fn: Optional[Callable[[tuple], dict]] = None):
+        super().__init__()
+        self.prefix_tokens = prefix_tokens
+        self.max_entries = max_entries
+        self._placer = LeastLoaded(load_fn)
+        self._map: OrderedDict[int, tuple] = OrderedDict()
+        self.prefix_hits = 0
+        self.prefix_misses = 0
+
+    def select(self, eps: list[dict], req: Request) -> dict:
+        pre = tuple(req.prompt_tokens[:self.prefix_tokens])
+        h = _stable_hash(repr(pre))
+        by_key = {endpoint_key(e): e for e in eps}
+        pinned = self._map.get(h)
+        if pinned is not None and pinned in by_key:
+            self._map.move_to_end(h)
+            self.prefix_hits += 1
+            return by_key[pinned]
+        self.prefix_misses += 1
+        ep = self._placer.select(eps, req)
+        self._map[h] = endpoint_key(ep)
+        self._map.move_to_end(h)
+        while len(self._map) > self.max_entries:
+            self._map.popitem(last=False)
+        return ep
+
+    def note_dispatch(self, ep: dict, req: Request):
+        super().note_dispatch(ep, req)
+        self._placer.note_dispatch(ep, req)
+
+    def note_finish(self, ep_key: tuple, req: Request):
+        self._placer.note_finish(ep_key, req)
+
+    def stats(self) -> dict:
+        out = super().stats()
+        out.update(prefix_hits=self.prefix_hits,
+                   prefix_misses=self.prefix_misses,
+                   tracked_prefixes=len(self._map))
+        return out
+
+
+POLICIES = {
+    "round_robin": RoundRobin,
+    "least_loaded": LeastLoaded,
+    "session_affinity": SessionAffinity,
+    "prefix_aware": PrefixAware,
+}
+
+
+def make_policy(name: str,
+                load_fn: Optional[Callable[[tuple], dict]] = None,
+                **kw) -> RoutingPolicy:
+    """Policy factory used by the Web Gateway; `load_fn` maps an endpoint
+    (node, port) key to its latest Metrics-Gateway scrape snapshot."""
+    try:
+        cls = POLICIES[name]
+    except KeyError:
+        raise ValueError(f"unknown routing policy {name!r}; "
+                         f"choose from {sorted(POLICIES)}") from None
+    if cls in (LeastLoaded, PrefixAware):
+        kw.setdefault("load_fn", load_fn)
+    return cls(**kw)
+
+
+# ---------------------------------------------------------------------------
+# router-side request queuing
+# ---------------------------------------------------------------------------
+
+@dataclass
+class QueuedRequest:
+    req: Request
+    model_name: str
+    enqueued_at: float
+    deadline: float
+    # re-dispatch closure supplied by the gateway (captures auth context)
+    dispatch: Callable[[Request], int] = field(repr=False, default=None)
+
+
+class GatewayQueue:
+    """Bounded FIFO per-model holding area for requests that would
+    otherwise be rejected 461 (model configured, no ready endpoint).
+
+    capacity == 0 disables queuing (seed behaviour). Entries past their TTL
+    are expired on every drain pass; `depth(model)` and `head_age(model)`
+    feed the Metrics-Gateway scrape so the autoscaler sees queued demand
+    even while a model has zero live instances.
+    """
+
+    def __init__(self, capacity: int = 0, ttl: float = 30.0):
+        self.capacity = capacity
+        self.ttl = ttl
+        self._q: dict[str, deque[QueuedRequest]] = {}
+        self.enqueued = 0
+        self.drained = 0
+        self.expired = 0
+        self.rejected_full = 0
+
+    @property
+    def enabled(self) -> bool:
+        return self.capacity > 0
+
+    def total_depth(self) -> int:
+        return sum(len(q) for q in self._q.values())
+
+    def depth(self, model_name: str) -> int:
+        return len(self._q.get(model_name, ()))
+
+    def head_age(self, model_name: str, now: float) -> float:
+        q = self._q.get(model_name)
+        return (now - q[0].enqueued_at) if q else 0.0
+
+    def models(self) -> list[str]:
+        return [m for m, q in self._q.items() if q]
+
+    def offer(self, req: Request, model_name: str, now: float,
+              dispatch: Callable[[Request], int]) -> bool:
+        """Try to enqueue; False means the queue is disabled or full."""
+        if not self.enabled:
+            return False
+        if self.total_depth() >= self.capacity:
+            self.rejected_full += 1
+            return False
+        self._q.setdefault(model_name, deque()).append(QueuedRequest(
+            req=req, model_name=model_name, enqueued_at=now,
+            deadline=now + self.ttl, dispatch=dispatch))
+        self.enqueued += 1
+        return True
+
+    def expire(self, now: float) -> list[QueuedRequest]:
+        """Drop entries past their deadline (FIFO heads first)."""
+        out = []
+        for q in self._q.values():
+            while q and q[0].deadline <= now:
+                out.append(q.popleft())
+        self.expired += len(out)
+        return out
+
+    def drain(self, model_name: str, now: float,
+              can_dispatch: Callable[[str], bool]) -> int:
+        """Re-dispatch queued requests for `model_name` while an endpoint
+        is ready. Returns the number forwarded."""
+        q = self._q.get(model_name)
+        n = 0
+        while q and can_dispatch(model_name):
+            item = q.popleft()
+            status = item.dispatch(item.req)
+            if status != 200:
+                # endpoint vanished between the check and the dispatch:
+                # put it back (front) and stop this pass
+                q.appendleft(item)
+                break
+            n += 1
+        self.drained += n
+        return n
+
+    def stats(self) -> dict:
+        return {"depth": self.total_depth(), "enqueued": self.enqueued,
+                "drained": self.drained, "expired": self.expired,
+                "rejected_full": self.rejected_full}

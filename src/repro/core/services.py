@@ -142,12 +142,17 @@ class EndpointWorker:
 
     def __init__(self, db: Database, loop: EventLoop, slurm: SimSlurm,
                  registry: dict, interval: float = 5.0,
-                 startup_timeout: float = 1800.0):
+                 startup_timeout: float = 1800.0,
+                 on_ready: Optional[Callable[[str], None]] = None):
         self.db = db
         self.loop = loop
         self.slurm = slurm
         self.registry = registry       # (node, port) -> VLLMInstance
         self.startup_timeout = startup_timeout
+        # fn(model_name), fired on the not-ready -> ready transition; the
+        # Web Gateway uses this to drain its router-side queue immediately
+        # instead of waiting for the next drain tick
+        self.on_ready = on_ready
         loop.every(interval, self.run)
 
     def _health(self, job: dict) -> Optional[int]:
@@ -168,11 +173,15 @@ class EndpointWorker:
                 if job["ready_at"] is None:
                     self.db["ai_model_endpoint_jobs"].update(
                         job["id"], ready_at=now)
+                became_ready = None
                 for ep in self.db["ai_model_endpoints"].select(
                         endpoint_job_id=job["id"]):
                     if ep["ready_at"] is None:
                         self.db["ai_model_endpoints"].update(
                             ep["id"], ready_at=now)
+                        became_ready = ep["model_name"]
+                if became_ready is not None and self.on_ready is not None:
+                    self.on_ready(became_ready)
                 continue
             # no response: (1) cancelled/expired/failed, (2) still starting
             dead = state not in (JobState.PENDING, JobState.RUNNING)

@@ -5,22 +5,31 @@ encrypted store with a TTL'd distributed memory cache; strong request
 validation; endpoint lookup in ai_model_endpoints; forwarding with all
 request parameters; custom status codes when no ready endpoint exists.
 
+Endpoint selection is delegated to a pluggable `RoutingPolicy`
+(repro.core.router): round-robin (paper/seed default), least-loaded,
+session-affinity or prefix-aware. With `ServiceConfig.queue_capacity > 0`
+the gateway additionally holds would-be-461 requests in a bounded TTL
+queue and drains them when the controller brings an instance up — the
+production-stack "router-side request queuing" design.
+
 Latency accounting (virtual clock): every hop/db trip adds to the request's
 client-observed times — this is what the Table-1 "Web Gateway vs vLLM node"
 comparison measures.
 """
 from __future__ import annotations
 
-import itertools
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Callable, Optional
 
+from repro.config import ServiceConfig
 from repro.core.db import Database
+from repro.core.router import GatewayQueue, endpoint_key, make_policy
 from repro.core.simclock import EventLoop
-from repro.engine.request import Request
+from repro.engine.request import Request, RequestStatus
 
 # custom HTTP-ish status codes (paper: "custom status codes are returned")
 OK = 200
+QUEUED = 202                 # held in the gateway queue (queuing enabled)
 UNAUTHENTICATED = 401
 MODEL_UNKNOWN = 460          # no configuration for requested model
 MODEL_NOT_READY = 461        # configured but no ready endpoint yet
@@ -38,6 +47,7 @@ class GatewayLatency:
 
 @dataclass
 class GatewayStats:
+    # queue counters live on GatewayQueue (see router_stats()), not here
     requests: int = 0
     rejected_auth: int = 0
     rejected_no_endpoint: int = 0
@@ -49,15 +59,28 @@ class GatewayStats:
 
 class WebGateway:
     def __init__(self, db: Database, loop: EventLoop, registry: dict,
-                 latency: GatewayLatency = None, auth_cache_ttl: float = 60.0):
+                 latency: GatewayLatency = None, auth_cache_ttl: float = 60.0,
+                 services: Optional[ServiceConfig] = None,
+                 load_fn: Optional[Callable[[tuple], dict]] = None):
         self.db = db
         self.loop = loop
         self.registry = registry                  # (node, port) -> instance
         self.lat = latency or GatewayLatency()
         self.auth_cache_ttl = auth_cache_ttl
+        self.services = services or ServiceConfig()
         self._auth_cache: dict[str, tuple] = {}   # api_key -> (tenant, expiry)
-        self._rr = itertools.count()              # round-robin cursor
         self.stats = GatewayStats()
+        svc = self.services
+        self.router = make_policy(
+            svc.routing_policy, load_fn=load_fn,
+            **({"replicas": svc.affinity_replicas}
+               if svc.routing_policy == "session_affinity" else {}),
+            **({"prefix_tokens": svc.prefix_tokens}
+               if svc.routing_policy == "prefix_aware" else {}))
+        self.queue = GatewayQueue(capacity=svc.queue_capacity,
+                                  ttl=svc.queue_ttl)
+        if self.queue.enabled:
+            loop.every(svc.queue_drain_interval, self._queue_tick)
 
     # ------------------------------------------------------------------
     def _authenticate(self, api_key: str, now: float):
@@ -72,18 +95,22 @@ class WebGateway:
             self._auth_cache[api_key] = (tenant, now + self.auth_cache_ttl)
         return tenant, self.lat.auth_db_trip
 
-    def _pick_endpoint(self, model_name: str):
-        eps = [ep for ep in self.db["ai_model_endpoints"].select(
+    def _ready_endpoints(self, model_name: str) -> list[dict]:
+        return [ep for ep in self.db["ai_model_endpoints"].select(
             model_name=model_name) if ep["ready_at"] is not None]
-        if not eps:
-            return None
-        eps.sort(key=lambda e: e["id"])
-        return eps[next(self._rr) % len(eps)]
+
+    def _has_dispatchable(self, model_name: str) -> bool:
+        for ep in self._ready_endpoints(model_name):
+            inst = self.registry.get(endpoint_key(ep))
+            if inst is not None and inst.alive:
+                return True
+        return False
 
     # ------------------------------------------------------------------
     def handle(self, api_key: str, model_name: str, req: Request) -> int:
         """One inference request. Returns status; on 200 the request has
-        been forwarded (arrival at the engine = now + gateway latency)."""
+        been forwarded (arrival at the engine = now + gateway latency);
+        on 202 it is held in the gateway queue."""
         now = self.loop.now
         self.stats.requests += 1
         req.metrics.gateway_time = now
@@ -103,29 +130,82 @@ class WebGateway:
             return self._status(MODEL_UNKNOWN)
 
         self.stats.db_trips += 1
-        ep = self._pick_endpoint(model_name)
-        if ep is None:
+        status = self._route_and_forward(model_name, req, t_auth=t_auth)
+        if status in (MODEL_NOT_READY, INSTANCE_UNREACHABLE):
+            if self.queue.offer(
+                    req, model_name, now,
+                    dispatch=lambda r: self._route_and_forward(model_name, r)):
+                return self._status(QUEUED)
             self.stats.rejected_no_endpoint += 1
-            return self._status(MODEL_NOT_READY)
+        return self._status(status)
 
-        inst = self.registry.get((ep["node"], ep["port"]))
+    def _route_and_forward(self, model_name: str, req: Request,
+                           t_auth: Optional[float] = None) -> int:
+        """Policy selection + forward. Returns OK / MODEL_NOT_READY /
+        INSTANCE_UNREACHABLE without recording per-status stats (the caller
+        decides whether the request instead enters the queue)."""
+        eps = self._ready_endpoints(model_name)
+        if not eps:
+            return MODEL_NOT_READY
+        ep = self.router.select(eps, req)
+        inst = self.registry.get(endpoint_key(ep))
         if inst is None or not inst.alive:
-            self.stats.rejected_no_endpoint += 1
-            return self._status(INSTANCE_UNREACHABLE)
+            # the picked endpoint is a zombie row: any live alternative?
+            live = [e for e in eps
+                    if (i := self.registry.get(endpoint_key(e))) is not None
+                    and i.alive]
+            if not live:
+                return INSTANCE_UNREACHABLE
+            ep = self.router.select(live, req)
+            inst = self.registry[endpoint_key(ep)]
+        self._forward(ep, inst, req,
+                      t_auth if t_auth is not None else self.lat.auth_cache_hit)
+        return OK
 
+    def _forward(self, ep: dict, inst, req: Request, t_auth: float):
         delay = t_auth + self.lat.endpoint_db_trip + self.lat.forward_hop
         # response streaming: client-side timestamps add the return hop
         user_cb = req.on_token
+        key = endpoint_key(ep)
 
         def on_token(r, tok, t):
             if user_cb is not None:
                 user_cb(r, tok, t + self.lat.response_hop)
+            if r.is_finished(tok):
+                self.router.note_finish(key, r)
 
         req.on_token = on_token
+        self.router.note_dispatch(ep, req)
         self.loop.call_after(delay,
                              lambda: inst.submit(req, bearer=ep["bearer_token"]))
         self.stats.forwarded += 1
-        return self._status(OK)
+
+    # -- router-side queue --------------------------------------------------
+    def notify_ready(self, model_name: str):
+        """Called by the Endpoint Worker when an instance becomes ready:
+        drain queued requests for that model immediately."""
+        if self.queue.enabled:
+            self._drain(model_name)
+
+    def _queue_tick(self, now: float = None):
+        now = self.loop.now if now is None else now
+        for item in self.queue.expire(now):
+            # TTL exceeded: answer with the paper's 461 after the fact
+            item.req.status = RequestStatus.FAILED
+            self.stats.rejected_no_endpoint += 1
+            self._status(MODEL_NOT_READY)
+        for model_name in self.queue.models():
+            self._drain(model_name)
+
+    def _drain(self, model_name: str):
+        self.queue.drain(model_name, self.loop.now,
+                         can_dispatch=self._has_dispatchable)
+
+    # ------------------------------------------------------------------
+    def router_stats(self) -> dict:
+        out = self.router.stats()
+        out["queue"] = self.queue.stats()
+        return out
 
     def _status(self, code: int) -> int:
         self.stats.per_status[code] = self.stats.per_status.get(code, 0) + 1

@@ -90,6 +90,9 @@ class Request:
     sampling: SamplingParams = field(default_factory=SamplingParams)
     request_id: int = field(default_factory=lambda: _next_id())
     model: str = ""
+    # multi-turn chat / tenant key used by session-affinity routing; None
+    # for one-shot requests (router falls back to round-robin)
+    session_id: Optional[str] = None
     status: RequestStatus = RequestStatus.WAITING
     output_tokens: list = field(default_factory=list)
     metrics: RequestMetrics = field(default_factory=RequestMetrics)

@@ -19,6 +19,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax 0.4.x names this TPUCompilerParams; 0.5+ renamed it
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 NEG_INF = -1e30
 
 
@@ -110,7 +113,7 @@ def paged_attention(q, pool_k, pool_v, block_tables, context_lens,
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((s, kv, qpk, d), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(block_tables, context_lens, qg, pool_k, pool_v)

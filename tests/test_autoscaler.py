@@ -1,0 +1,164 @@
+"""Autoscaler edge cases (paper §3.3): cooldown refractory period, breaches
+that clear before `for_duration`, metric-less history samples, and the
+beyond-paper idle scale-down rule never killing a config's last instance.
+
+Uses a stub metrics gateway (plain deques) so each case runs in
+microseconds of wall time with exact control over the scrape series."""
+from collections import defaultdict, deque
+
+from repro.core.autoscaler import (AlertRule, Autoscaler,
+                                   GATEWAY_QUEUE_SCALE_UP, IDLE_SCALE_DOWN,
+                                   QUEUE_TIME_SCALE_UP)
+from repro.core.db import Database
+from repro.core.metrics_gateway import MetricsGateway
+from repro.core.simclock import EventLoop
+
+
+class StubGateway:
+    """history + series + webhook capture, nothing else."""
+
+    def __init__(self):
+        self.history = defaultdict(deque)
+        self.webhooks = []
+
+    def series(self, config_id, metric, since):
+        return [(t, m[metric]) for t, m in self.history[config_id]
+                if t >= since and metric in m]
+
+    def grafana_webhook(self, payload):
+        self.webhooks.append(dict(payload, t=self._now))
+        return 200
+
+
+def drive(rule, samples, eval_interval=10.0, until=400.0):
+    """Feed (t, metrics-dict) samples into a fresh Autoscaler run."""
+    gw = StubGateway()
+    loop = EventLoop()
+    scaler = Autoscaler(gw, loop, rules=[rule], eval_interval=eval_interval)
+    for t, m in samples:
+        loop.call_at(t, lambda t=t, m=m: gw.history[1].append((t, m)))
+
+    def _track():
+        gw._now = loop.now
+    loop.every(1.0, lambda now: _track())
+    gw._now = 0.0
+    loop.run_until(until)
+    return gw, scaler
+
+
+def qt(v):
+    return {"queue_time_max": v}
+
+
+def test_sustained_breach_fires_once_per_cooldown():
+    rule = AlertRule("qt", "queue_time_max", "gt", 5.0, for_duration=30.0,
+                     delta=+1, cooldown=100.0)
+    # breach continuously for 400 s, sampled every 5 s
+    samples = [(float(t), qt(9.0)) for t in range(0, 400, 5)]
+    gw, scaler = drive(rule, samples)
+    fire_times = [t for t, _, _ in scaler.fired]
+    assert len(fire_times) >= 2
+    # refractory period respected between consecutive fires
+    gaps = [b - a for a, b in zip(fire_times, fire_times[1:])]
+    assert all(g >= rule.cooldown for g in gaps), gaps
+    # and the first fire waited out for_duration
+    assert fire_times[0] >= 30.0
+
+
+def test_breach_clearing_before_for_duration_never_fires():
+    rule = AlertRule("qt", "queue_time_max", "gt", 5.0, for_duration=30.0,
+                     delta=+1, cooldown=60.0)
+    # 20 s spikes separated by recovery: no window of 30 sustained seconds
+    samples = []
+    for t in range(0, 400, 5):
+        breach = (t % 50) < 20
+        samples.append((float(t), qt(9.0 if breach else 1.0)))
+    gw, scaler = drive(rule, samples)
+    assert scaler.fired == []
+    assert gw.webhooks == []
+
+
+def test_pending_breach_resets_after_clear():
+    rule = AlertRule("qt", "queue_time_max", "gt", 5.0, for_duration=30.0,
+                     delta=+1, cooldown=60.0)
+    # 25 s breach, 10 s clear, then a 35 s breach -> exactly one fire, and
+    # only from the second episode (the first 25 s must not carry over)
+    samples = []
+    for t in range(0, 25, 5):
+        samples.append((float(t), qt(9.0)))
+    for t in range(25, 35, 5):
+        samples.append((float(t), qt(0.5)))
+    for t in range(35, 75, 5):
+        samples.append((float(t), qt(9.0)))
+    gw, scaler = drive(rule, samples, until=120.0)
+    assert len(scaler.fired) == 1
+    assert scaler.fired[0][0] >= 65.0     # 35 + for_duration
+
+
+def test_missing_metric_samples_are_skipped_not_zero_filled():
+    # partial samples (gateway-queue only) must not satisfy or break an
+    # engine-metric rule
+    rule = AlertRule("idle", "kv_util_avg", "lt", 0.02, for_duration=30.0,
+                     delta=-1, cooldown=60.0)
+    samples = [(float(t), {"gateway_queued": 3, "queue_time_max": 8.0})
+               for t in range(0, 200, 5)]
+    gw, scaler = drive(rule, samples, until=200.0)
+    assert scaler.fired == []
+
+
+def test_gateway_queue_rule_fires_on_partial_samples():
+    samples = [(float(t), {"gateway_queued": 4, "queue_time_max": 12.0})
+               for t in range(0, 100, 5)]
+    gw, scaler = drive(GATEWAY_QUEUE_SCALE_UP, samples, until=100.0)
+    assert scaler.fired
+    assert gw.webhooks[0]["delta"] == +1
+
+
+def test_default_rules_include_gateway_queue():
+    gw = StubGateway()
+    scaler = Autoscaler(gw, EventLoop())
+    names = {r.name for r in scaler.rules}
+    assert QUEUE_TIME_SCALE_UP.name in names
+    assert GATEWAY_QUEUE_SCALE_UP.name in names
+    assert IDLE_SCALE_DOWN.name in names
+
+
+# ---------------------------------------------------------------------------
+# actuation clamps (MetricsGateway webhook side)
+# ---------------------------------------------------------------------------
+
+def mk_gateway(instances):
+    db = Database()
+    loop = EventLoop()
+    gw = MetricsGateway(db, loop, registry={}, min_instances=1,
+                        max_instances=4)
+    cfg = db["ai_model_configurations"].insert(
+        db, model_name="m", instances=instances)
+    return db, gw, cfg
+
+
+def test_idle_scale_down_never_kills_last_instance():
+    db, gw, cfg = mk_gateway(instances=1)
+    code = gw.grafana_webhook({"config_id": cfg["id"], "delta": -1,
+                               "rule": IDLE_SCALE_DOWN.name})
+    assert code == 200
+    assert db["ai_model_configurations"].get(cfg["id"])["instances"] == 1
+    assert gw.scale_events == []          # clamped no-op is not an event
+
+
+def test_scale_down_stops_at_min_then_up_at_max():
+    db, gw, cfg = mk_gateway(instances=2)
+    gw.grafana_webhook({"config_id": cfg["id"], "delta": -1, "rule": "idle"})
+    assert db["ai_model_configurations"].get(cfg["id"])["instances"] == 1
+    gw.grafana_webhook({"config_id": cfg["id"], "delta": -1, "rule": "idle"})
+    assert db["ai_model_configurations"].get(cfg["id"])["instances"] == 1
+    for _ in range(6):
+        gw.grafana_webhook({"config_id": cfg["id"], "delta": +1,
+                            "rule": "qt"})
+    assert db["ai_model_configurations"].get(cfg["id"])["instances"] == 4
+
+
+def test_webhook_unknown_config_is_404():
+    db, gw, cfg = mk_gateway(instances=1)
+    assert gw.grafana_webhook({"config_id": 999, "delta": +1,
+                               "rule": "qt"}) == 404

@@ -10,6 +10,7 @@ from repro.kernels.paged_attention.kernel import paged_attention
 from repro.kernels.paged_attention.ref import paged_attention_ref
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("s,h,kv,d,bs,mb", [
     (4, 8, 2, 128, 16, 8),
     (2, 4, 4, 64, 32, 4),
@@ -52,6 +53,7 @@ def test_paged_attention_single_token_context(rng):
     np.testing.assert_allclose(np.asarray(ref), v0, rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("b,t,h,kv,d,window,bq,bk", [
     (2, 256, 4, 2, 64, 0, 64, 64),
     (1, 256, 8, 8, 128, 0, 128, 128),

@@ -1,7 +1,12 @@
-"""Property-based tests (hypothesis) for the paged-KV control plane —
-the invariants a 1000-node deployment lives or dies by."""
-import hypothesis.strategies as st
-from hypothesis import given, settings
+"""Randomised invariant tests for the paged-KV control plane — the
+invariants a 1000-node deployment lives or dies by.
+
+Formerly hypothesis property tests; rewritten as seeded-random pytest
+parametrizations so the tier-1 suite collects with stdlib + pytest + numpy
+only (the container does not ship hypothesis). Each seed regenerates the
+same arbitrary op interleavings deterministically."""
+import numpy as np
+import pytest
 
 from repro.engine.kv_cache import (BlockAllocator, OutOfBlocks, SequenceKV,
                                    chain_hash)
@@ -11,14 +16,16 @@ from repro.engine.kv_cache import (BlockAllocator, OutOfBlocks, SequenceKV,
 # allocator invariants under arbitrary alloc/free/fork interleavings
 # ---------------------------------------------------------------------------
 
-@settings(max_examples=200, deadline=None)
-@given(st.lists(st.tuples(st.sampled_from(["alloc", "free", "fork"]),
-                          st.integers(0, 63)), max_size=200),
-       st.integers(4, 64))
-def test_allocator_never_leaks_or_double_frees(ops, num_blocks):
+@pytest.mark.parametrize("seed", range(40))
+def test_allocator_never_leaks_or_double_frees(seed):
+    rng = np.random.default_rng(seed)
+    num_blocks = int(rng.integers(4, 65))
+    n_ops = int(rng.integers(0, 200))
     alloc = BlockAllocator(num_blocks, 16, enable_prefix_caching=False)
     held: list[int] = []
-    for op, arg in ops:
+    for _ in range(n_ops):
+        op = rng.choice(["alloc", "free", "fork"])
+        arg = int(rng.integers(0, 64))
         if op == "alloc":
             try:
                 held.append(alloc.allocate())
@@ -37,16 +44,17 @@ def test_allocator_never_leaks_or_double_frees(ops, num_blocks):
     assert alloc.num_free() == num_blocks
 
 
-@settings(max_examples=100, deadline=None)
-@given(st.lists(st.integers(1, 40), min_size=1, max_size=12),
-       st.integers(2, 8))
-def test_sequence_blocks_match_token_count(appends, block_size):
+@pytest.mark.parametrize("seed", range(25))
+def test_sequence_blocks_match_token_count(seed):
+    rng = np.random.default_rng(seed)
+    block_size = int(rng.integers(2, 9))
+    appends = rng.integers(1, 41, size=int(rng.integers(1, 13)))
     alloc = BlockAllocator(4096, block_size, enable_prefix_caching=False)
     seq = SequenceKV(alloc)
     total = 0
     for n in appends:
-        seq.append_tokens(n)
-        total += n
+        seq.append_tokens(int(n))
+        total += int(n)
         assert seq.num_tokens == total
         assert seq.num_blocks == -(-total // block_size)
     seq.release()
@@ -58,13 +66,12 @@ def test_sequence_blocks_match_token_count(appends, block_size):
 # prefix caching: correctness of content-addressed reuse
 # ---------------------------------------------------------------------------
 
-@settings(max_examples=100, deadline=None)
-@given(st.integers(2, 8), st.integers(0, 70), st.integers(0, 70),
-       st.integers(0, 1000))
-def test_prefix_match_covers_exactly_common_complete_blocks(
-        block_size, len_a, len_b, seed):
-    import numpy as np
+@pytest.mark.parametrize("seed", range(30))
+def test_prefix_match_covers_exactly_common_complete_blocks(seed):
     rng = np.random.default_rng(seed)
+    block_size = int(rng.integers(2, 9))
+    len_a = int(rng.integers(0, 71))
+    len_b = int(rng.integers(0, 71))
     master = rng.integers(1, 100, size=128).tolist()
     a = master[:len_a] + rng.integers(100, 200, size=4).tolist()
     b = master[:len_b] + rng.integers(200, 300, size=4).tolist()
@@ -81,8 +88,6 @@ def test_prefix_match_covers_exactly_common_complete_blocks(
         if x != y:
             break
         common += 1
-    expect = min(common // block_size * block_size, len(b) - 1
-                 if (len(b) - 1) // block_size * block_size <= common else 0)
     # covered tokens are a complete-block prefix of the common prefix and
     # never include b's final token
     assert covered % block_size == 0
@@ -132,3 +137,13 @@ def test_evictable_blocks_are_reused_before_eviction():
     for h in held:
         alloc.free(h)
     alloc.check_invariants()
+
+
+def test_chain_hash_is_order_and_prefix_sensitive():
+    h1 = chain_hash(None, (1, 2, 3, 4))
+    h2 = chain_hash(None, (1, 2, 4, 3))
+    assert h1 != h2
+    # same block content under different parents must not collide
+    assert chain_hash(h1, (5, 6)) != chain_hash(h2, (5, 6))
+    # deterministic across calls (content-addressing requirement)
+    assert h1 == chain_hash(None, (1, 2, 3, 4))

@@ -14,6 +14,15 @@ from repro.models import api, moe
 
 ARCHS = list(configs.ARCH_IDS)
 
+# tier-1 exercises one representative arch per family through the expensive
+# train-step / decode-oracle paths; the full sweep runs under `-m slow`.
+# (abstract-init, analytic-param and cache-spec tests below still cover
+# every arch in tier-1 — they are cheap — and the moe serving path keeps
+# tier-1 exactness coverage via test_moe_dropless_serving_is_exact.)
+FAST_ARCHS = {"smollm-135m", "mamba2-780m", "pixtral-12b"}
+ARCH_PARAMS = [a if a in FAST_ARCHS
+               else pytest.param(a, marks=pytest.mark.slow) for a in ARCHS]
+
 
 def _batch(cfg, b, t, key):
     kt, kl, kf = jax.random.split(key, 3)
@@ -28,13 +37,13 @@ def _batch(cfg, b, t, key):
     return batch
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_smoke_train_step(arch, key):
     cfg = configs.get(arch).reduced()
     params, axes = api.init_params(cfg, key)
     assert jax.tree.structure(params) == jax.tree.structure(
         axes, is_leaf=lambda x: isinstance(x, tuple))
-    b, t = 2, 64
+    b, t = 2, 64    # ssm requires t % ssm_chunk == 0 (reduced chunk is 32)
     batch = _batch(cfg, b, t, key)
     loss, metrics = api.loss_fn(params, cfg, batch)
     assert loss.shape == ()
@@ -54,11 +63,12 @@ def test_abstract_init_matches_real(arch, key):
     assert rs == as_
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_decode_matches_forward(arch, key):
     cfg = configs.get(arch).reduced()
     params, _ = api.init_params(cfg, key)
-    b, t = 2, 24
+    # vlm needs room past the patch positions for a meaningful decode tail
+    b, t = 2, (24 if cfg.family == "vlm" else 12)
     batch = _batch(cfg, b, t, key)
     toks = batch["tokens"]
     mod = api.module_for(cfg)

@@ -11,10 +11,9 @@ from jax.sharding import PartitionSpec as P
 
 
 def test_spec_for_divisibility():
-    import jax
     from repro.distributed import sharding as sh
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(1, 1)
 
     class FakeMesh:
         shape = {"data": 16, "model": 16}
@@ -87,6 +86,7 @@ _SUBPROCESS = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_multidevice_sharded_steps():
     out = subprocess.run([sys.executable, "-c", _SUBPROCESS],
                          capture_output=True, text=True, timeout=600,

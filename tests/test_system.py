@@ -7,6 +7,7 @@ dense-cache oracle exactly (greedy)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro import configs
 from repro.config import TPU_V5E
@@ -17,6 +18,7 @@ from repro.engine.request import Request, SamplingParams
 from repro.models import api
 
 
+@pytest.mark.slow
 def test_full_stack_real_compute_end_to_end():
     cfg = configs.get("qwen3-1.7b").reduced()
     params, _ = api.init_params(cfg, jax.random.key(5))

@@ -61,17 +61,17 @@ def test_pipeline_deterministic_and_seekable():
 
 def test_trainer_learns_and_resumes_exactly(tmp_path):
     cfg = configs.get("smollm-135m").reduced()
-    tc = TrainerConfig(seq_len=128, global_batch=4, steps=26, ckpt_every=8,
+    tc = TrainerConfig(seq_len=64, global_batch=4, steps=14, ckpt_every=6,
                        ckpt_dir=str(tmp_path), log_every=100)
     tr = Trainer(cfg, tc)
-    hist = tr.run(steps=24)           # "crash" right after the step-24 ckpt
+    hist = tr.run(steps=12)           # "crash" right after the step-12 ckpt
     assert hist[-1]["loss"] < hist[0]["loss"], "no learning signal"
 
-    # restart -> resumes at 24 and continues to 26
+    # restart -> resumes at 12 and continues to 14
     tr3 = Trainer(cfg, tc)
-    assert tr3.step_idx == 24
+    assert tr3.step_idx == 12
     h3 = tr3.run()
-    assert tr3.step_idx == 26
+    assert tr3.step_idx == 14
     assert np.isfinite(h3[-1]["loss"])
 
     # exact-resume: a run without interruption matches the resumed one

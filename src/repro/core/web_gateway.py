@@ -166,6 +166,13 @@ class WebGateway:
         delay = t_auth + self.lat.endpoint_db_trip + self.lat.forward_hop
         # response streaming: client-side timestamps add the return hop
         user_cb = req.on_token
+        # a re-dispatched request (queue-drain retry, or a client retry after
+        # its first instance died mid-hop) already carries this gateway's
+        # wrapper: unwrap back to the original client callback so the
+        # response hop is not added twice and note_finish does not fire for
+        # a stale endpoint key
+        if hasattr(user_cb, "_gateway_client_cb"):
+            user_cb = user_cb._gateway_client_cb
         key = endpoint_key(ep)
 
         def on_token(r, tok, t):
@@ -174,6 +181,7 @@ class WebGateway:
             if r.is_finished(tok):
                 self.router.note_finish(key, r)
 
+        on_token._gateway_client_cb = user_cb
         req.on_token = on_token
         self.router.note_dispatch(ep, req)
         self.loop.call_after(delay,

@@ -243,6 +243,37 @@ def test_status_codes_460_461_462():
     assert st.per_status[INSTANCE_UNREACHABLE] == 1
 
 
+def test_forward_redispatch_does_not_double_wrap():
+    """A request that goes through `_forward` twice (queue-drain retry, or a
+    client retry after its first instance died mid-hop) must not stack
+    gateway wrappers: the client sees exactly ONE response hop on every
+    token, not one per dispatch attempt."""
+    cp = mk_plane()
+    cp.add_model(configs.get(MODEL), instances=2, est_load_time=10.0)
+    cp.run_until(120.0)
+    rows = cp.ready_endpoints(MODEL)
+    assert len(rows) == 2
+    gw = cp.web_gateway
+    dead = cp.registry[(rows[0]["node"], rows[0]["port"])]
+    dead.kill()
+    times = []
+    r = req(out=3)
+    r.on_token = lambda rq, tok, t: times.append(t)
+    # first dispatch attempt lands on the just-died instance...
+    gw._forward(rows[0], dead, r, gw.lat.auth_cache_hit)
+    # ...and the re-dispatch goes to the live one
+    live = cp.registry[(rows[1]["node"], rows[1]["port"])]
+    gw._forward(rows[1], live, r, gw.lat.auth_cache_hit)
+    cp.run_until(cp.loop.now + 60.0)
+    assert r.status.value == "finished"
+    assert len(times) == 3
+    # client-observed times = engine times + exactly one response hop
+    assert times[0] == pytest.approx(
+        r.metrics.first_token_time + gw.lat.response_hop, abs=1e-12)
+    assert times[-1] == pytest.approx(
+        r.metrics.finish_time + gw.lat.response_hop, abs=1e-12)
+
+
 def test_queued_request_drains_after_spin_up():
     svc = ServiceConfig(queue_capacity=16, queue_ttl=300.0)
     cp = mk_plane(services=svc)

@@ -12,6 +12,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro import configs
+from repro.api import CompletionRequest, ServingClient
 from repro.config import GPU_L40S, ServiceConfig
 from repro.core.controller import ClusterSpec, ControlPlane
 from repro.core.router import POLICIES
@@ -48,11 +49,14 @@ def run(duration: float = 420.0, rate: float = 5.0, seed: int = 0,
     cp.run_until(90.0)
     t0 = cp.loop.now
 
+    client = ServingClient(cp, api_key="sk-bench", default_model=MODEL)
+    # rejected arrivals (461/462, queuing disabled or full) are dropped
+    streams, submit = client.submitter()
+
     wl = bursty_poisson(rate, duration, seed=seed)
     for req, at in zip(wl.requests, wl.arrivals):
-        cp.loop.call_at(t0 + at,
-                        lambda r=req: cp.web_gateway.handle("sk-bench",
-                                                            MODEL, r))
+        wire = CompletionRequest.from_engine(req, MODEL, stream=True)
+        cp.loop.call_at(t0 + at, lambda w=wire: submit(w))
     cp.run_until(t0 + duration + 240.0)
 
     series = cp.metrics_gateway.history.get(1, [])
@@ -62,7 +66,7 @@ def run(duration: float = 420.0, rate: float = 5.0, seed: int = 0,
                        or t <= cp.metrics_gateway.scale_events[0][0] - t0),
                       default=0.0)
     tail = [v for t, v in qt if t > duration]
-    finished = sum(1 for r in wl.requests if r.status.value == "finished")
+    finished = sum(1 for s in streams if s.ok)
     return {
         "requests": len(wl.requests),
         "finished": finished,

@@ -21,11 +21,11 @@ import dataclasses
 import itertools
 
 from repro import configs
+from repro.api import CompletionRequest, ServingClient
 from repro.config import ServiceConfig
 from repro.core.controller import ClusterSpec, ControlPlane
 from repro.core.web_gateway import GatewayLatency
 from repro.data.burstgpt import concurrent_burst
-from repro.engine.request import Request, SamplingParams
 
 from repro.core.router import POLICIES as _POLICY_REGISTRY
 
@@ -111,30 +111,30 @@ def build_skewed_plane(policy: str, node: str = "GPU-L",
 def run_policy_scenario(policy: str, n: int, seed: int = 0,
                         ramp_s: float = 30.0, sessions: int = 32) -> dict:
     cp = build_skewed_plane(policy)
+    client = ServingClient(cp, api_key="sk-bench")
     wl = concurrent_burst(n, seed=seed)
     rec = ClientRecorder()
     # warm the gateway auth cache (paper does the same before measuring)
-    warm = Request(prompt_tokens=[1] * 8,
-                   sampling=SamplingParams(target_output_len=1,
-                                           max_new_tokens=1))
-    cp.web_gateway.handle("sk-bench", MODEL, warm)
-    cp.loop.run_while(lambda: warm.status.value not in ("finished", "failed"),
-                      max_t=cp.loop.now + 30.0)
+    client.completions(model=MODEL, prompt=[1] * 8, max_tokens=1,
+                       target_output_len=1).result(max_wait=30.0)
     t0 = cp.loop.now
+    streams = []
     # ramped arrival (not all-at-once): load-aware policies need at least
     # one scrape interval of feedback to see the skew
     for i, req in enumerate(wl.requests):
         req.session_id = f"s{i % sessions}"
+        wire = CompletionRequest.from_engine(req, MODEL, stream=True)
         at = t0 + (i / max(len(wl.requests) - 1, 1)) * ramp_s
 
-        def submit(r=req, at=at):
-            rec.submit(r, at)
-            cp.web_gateway.handle("sk-bench", MODEL, r)
+        def submit(w=wire, at=at):
+            s = client.completions(w)
+            rec.track(s, at)
+            streams.append(s)
 
         cp.loop.call_at(at, submit)
     cp.loop.run_while(
-        lambda: any(r.status.value not in ("finished", "failed")
-                    for r in wl.requests),
+        lambda: len(streams) < len(wl.requests)
+        or any(not s.closed for s in streams),
         max_t=t0 + 7200.0)
     out = rec.summary()
     out.update(policy=policy, concurrency=n,

@@ -31,15 +31,34 @@ class ClientRecord:
 
 
 class ClientRecorder:
-    """Attaches to Request.on_token; measures what the vLLM serve-benchmark
-    measures, at the client side (streaming)."""
+    """Client-side streaming measurement (what the vLLM serve-benchmark
+    measures): subscribe to `TokenStream` sessions from the `ServingClient`
+    (gateway path) or attach to `Request.on_token` directly (direct-to-node
+    path)."""
 
     def __init__(self):
         self.records: dict[int, ClientRecord] = {}
 
+    def _record(self, request_id: int, now: float) -> ClientRecord:
+        rec = self.records[request_id] = ClientRecord(t_submit=now)
+        return rec
+
+    def track(self, stream, now: float) -> ClientRecord:
+        """ServingClient path: subscribe to a TokenStream session."""
+        rec = self._record(stream.req.request_id, now)
+
+        def on_token(r, tok, t):
+            if rec.t_first is None:
+                rec.t_first = t
+            rec.t_last = t
+            rec.n_tokens += 1
+
+        stream.subscribe(on_token)
+        return rec
+
     def submit(self, req, now: float):
-        self.records[req.request_id] = ClientRecord(t_submit=now)
-        rec = self.records[req.request_id]
+        """Direct-to-node path: install a raw on_token callback."""
+        rec = self._record(req.request_id, now)
 
         def on_token(r, tok, t):
             if rec.t_first is None:

@@ -4,6 +4,7 @@ plane's detection latency (Endpoint Worker), reconvergence time (Job Worker
 from __future__ import annotations
 
 from repro import configs
+from repro.api import CompletionRequest, ServingClient
 from repro.config import GPU_H100
 from repro.core.controller import ClusterSpec, ControlPlane
 from repro.data.burstgpt import bursty_poisson
@@ -25,10 +26,12 @@ def run(seed: int = 0) -> dict:
 
     wl = bursty_poisson(3.0, 300.0, seed=seed)
     t0 = cp.loop.now
+    client = ServingClient(cp, api_key="sk-bench", default_model=MODEL)
+    streams, submit = client.submitter()   # drop rejects (no ready endpoint)
+
     for req, at in zip(wl.requests, wl.arrivals):
-        cp.loop.call_at(t0 + at,
-                        lambda r=req: cp.web_gateway.handle("sk-bench",
-                                                            MODEL, r))
+        wire = CompletionRequest.from_engine(req, MODEL, stream=True)
+        cp.loop.call_at(t0 + at, lambda w=wire: submit(w))
     # kill the node hosting the first endpoint at t0+60
     victim = cp.ready_endpoints(MODEL)[0]["node"]
     t_kill = t0 + 60.0
@@ -49,8 +52,8 @@ def run(seed: int = 0) -> dict:
     cp.loop.every(1.0, lambda now: watch())
     cp.run_until(t0 + 500.0)
 
-    failed = sum(1 for r in wl.requests if r.status.value == "failed")
-    finished = sum(1 for r in wl.requests if r.status.value == "finished")
+    failed = sum(1 for s in streams if s.error is not None)
+    finished = sum(1 for s in streams if s.ok)
     return {
         "requests": len(wl.requests),
         "finished": finished,

@@ -11,10 +11,10 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 from repro import configs
+from repro.api import CompletionRequest, ServingClient
 from repro.config import GPU_H100, GPU_L40S
 from repro.core.controller import ClusterSpec, ControlPlane
 from repro.data.burstgpt import concurrent_burst
-from repro.engine.request import Request
 
 from benchmarks.harness import ClientRecorder, merge_runs
 
@@ -66,28 +66,32 @@ def run_scenario(node: str, mode: str, n: int, seed: int = 0) -> dict:
     wl = concurrent_burst(n, seed=seed)
     rec = ClientRecorder()
     inst = next(iter(cp.registry.values()))
-    # paper: one initial request warms the gateway auth cache before the run
-    from repro.engine.request import SamplingParams
-    warm = Request(prompt_tokens=[1] * 8,
-                   sampling=SamplingParams(target_output_len=1,
-                                           max_new_tokens=1))
-    cp.web_gateway.handle("sk-bench", MODEL, warm)
-    cp.loop.run_while(lambda: warm.status.value not in ("finished", "failed"),
-                      max_t=cp.loop.now + 30.0)
-    t0 = cp.loop.now
-    for req in wl.requests:
-        rec.submit(req, t0)
-        if mode == "gateway":
-            status = cp.web_gateway.handle("sk-bench", MODEL, req)
-            assert status == 200, status
-        else:  # direct vLLM node access
+    if mode == "gateway":
+        client = ServingClient(cp, api_key="sk-bench")
+        # paper: one initial request warms the gateway auth cache
+        client.completions(model=MODEL, prompt=[1] * 8, max_tokens=1,
+                           target_output_len=1).result(max_wait=30.0)
+        t0 = cp.loop.now
+        streams = [client.completions(
+            CompletionRequest.from_engine(r, MODEL, stream=True))
+            for r in wl.requests]
+        for s in streams:
+            rec.track(s, t0)
+        cp.loop.run_while(lambda: any(not s.closed for s in streams),
+                          max_t=t0 + 3600.0)
+        reqs = [s.req for s in streams]
+    else:  # direct vLLM node access
+        t0 = cp.loop.now
+        for req in wl.requests:
+            rec.submit(req, t0)
             inst.submit(req)
-    cp.loop.run_while(
-        lambda: any(r.status.value not in ("finished", "failed")
-                    for r in wl.requests),
-        max_t=t0 + 3600.0)
+        cp.loop.run_while(
+            lambda: any(r.status.value not in ("finished", "failed")
+                        for r in wl.requests),
+            max_t=t0 + 3600.0)
+        reqs = wl.requests
     out = rec.summary()
-    out["total_input_tokens"] = sum(r.prompt_len for r in wl.requests)
+    out["total_input_tokens"] = sum(r.prompt_len for r in reqs)
     out["queue_time_peak_s"] = max(
         (m["queue_time_max"] for c in cp.metrics_gateway.history.values()
          for _, m in c), default=0.0)

@@ -1,13 +1,16 @@
 """Quickstart: spin up the whole two-layer architecture in-process and
-serve a few requests through the Web Gateway with REAL model compute.
+serve a few chat completions through the OpenAI-compatible API layer with
+REAL model compute.
 
     PYTHONPATH=src python examples/quickstart.py [--arch qwen3-1.7b]
 
 What happens (paper §3): the Job Worker reconciles the model configuration
 into a Slurm job; the job registers with the Endpoint Gateway (port =
-argmax+1); the Endpoint Worker marks it ready after weight load; the Web
-Gateway authenticates, looks up the endpoint and forwards; tokens stream
-back per-step from the paged-attention engine.
+argmax+1); the Endpoint Worker marks it ready after weight load; the
+`ServingClient` validates the typed `ChatCompletionRequest`, the Web
+Gateway authenticates, looks up the endpoint and forwards; token deltas
+stream back per-step on a `TokenStream` session and the final response
+carries the OpenAI-style Usage block.
 """
 import argparse
 import sys
@@ -18,11 +21,11 @@ import jax
 import numpy as np
 
 from repro import configs
+from repro.api import APIStatusError, ChatMessage, ServingClient
 from repro.config import TPU_V5E
 from repro.core.controller import ClusterSpec, ControlPlane
 from repro.engine.engine import LLMEngine
 from repro.engine.executor import RealExecutor
-from repro.engine.request import Request, SamplingParams
 from repro.models import api
 
 
@@ -54,24 +57,36 @@ def main():
     print(f"      ready endpoints: "
           f"{[(e['node'], e['port']) for e in eps]}")
 
-    print("[3/4] sending 3 requests through the Web Gateway")
+    print("[3/4] sending 3 chat completions through the ServingClient")
+    client = ServingClient(cp, api_key="sk-demo", default_model=cfg.name)
+    # a wrong key raises a structured OpenAI-style error, not a bare int
+    try:
+        ServingClient(cp, api_key="sk-wrong").chat(
+            model=cfg.name, messages=[ChatMessage("user", [1, 2, 3])])
+    except APIStatusError as e:
+        print(f"      bad key -> {e.error.type}/{e.error.code} "
+              f"(HTTP {e.status})")
+
     rng = np.random.default_rng(0)
-    reqs = []
+    streams = []
     for i in range(3):
-        r = Request(
-            prompt_tokens=list(rng.integers(1, cfg.vocab_size, size=24)),
-            sampling=SamplingParams(temperature=0.0, max_new_tokens=10))
-        r.on_token = lambda req, tok, t: print(
-            f"      req{req.request_id} +token {tok} @t={t:.3f}s")
-        status = cp.web_gateway.handle("sk-demo", cfg.name, r)
-        print(f"      gateway status: {status}")
-        reqs.append(r)
+        prompt = list(rng.integers(1, cfg.vocab_size, size=24))
+        stream = client.chat(
+            messages=[ChatMessage(role="user", content=prompt)],
+            temperature=0.0, max_tokens=10, session_id=f"demo-{i}",
+            stream=True)
+        stream.subscribe(lambda req, tok, t: print(
+            f"      req{req.request_id} +token {tok} @t={t:.3f}s"))
+        streams.append(stream)
     cp.run_until(cp.loop.now + 60.0)
 
     print("[4/4] results")
-    for r in reqs:
-        print(f"      req{r.request_id}: {r.status.value:9s} "
-              f"out={r.output_tokens} ttft={r.metrics.ttft * 1e3:.1f}ms")
+    for stream in streams:
+        resp = stream.response()
+        choice = resp.choices[0]
+        print(f"      {resp.id}: finish={choice.finish_reason:7s} "
+              f"out={choice.message.content} "
+              f"usage={resp.usage.to_dict()}")
     snap = next(iter(cp.registry.values())).metrics_snapshot()
     print(f"      engine: {snap['requests_finished_total']} finished, "
           f"kv_util={snap['kv_utilization']:.3f}")

@@ -20,6 +20,7 @@ sys.path.insert(0, "src")
 import numpy as np
 
 from repro import configs
+from repro.api import CompletionRequest, ServingClient
 from repro.config import GPU_L40S, ServiceConfig
 from repro.core.controller import ClusterSpec, ControlPlane
 from repro.core.autoscaler import AlertRule, GATEWAY_QUEUE_SCALE_UP
@@ -51,12 +52,20 @@ def main():
     cp.run_until(10.0)
     t0 = cp.loop.now
 
+    client = ServingClient(cp, api_key="sk-cluster", default_model=MODEL)
+    # rejections (e.g. 461 with the queue full) are recorded by code
+    rejected = []
+    streams, submit = client.submitter(
+        on_error=lambda e: rejected.append(e.error.code))
+
     # 6-minute burst at ~6 req/s, then quiet for scale-down
     wl = bursty_poisson(rate=6.0, duration=360.0, seed=0)
     for req, at in zip(wl.requests, wl.arrivals):
-        cp.loop.call_at(t0 + at,
-                        lambda r=req: cp.web_gateway.handle(
-                            "sk-cluster", MODEL, r))
+        wire = CompletionRequest.from_engine(req, MODEL, stream=True)
+        cp.loop.call_at(t0 + at, lambda w=wire: submit(w))
+
+    def finished():
+        return sum(1 for s in streams if s.ok)
 
     for minute in range(16):
         cp.run_until(t0 + 60.0 * (minute + 1))
@@ -64,16 +73,22 @@ def main():
         hist = cp.metrics_gateway.history.get(1, [])
         qt = hist[-1][1]["queue_time_max"] if hist else 0.0
         util = cp.slurm.utilization()
-        fin = sum(1 for r in wl.requests if r.status.value == "finished")
         print(f"t={minute + 1:3d}min  instances={eps}  queue_time={qt:7.1f}s"
-              f"  slurm_gpu_util={util:.2f}  finished={fin}/{len(wl.requests)}")
+              f"  slurm_gpu_util={util:.2f}"
+              f"  finished={finished()}/{len(wl.requests)}")
 
     print("\nscale events:")
     for t, cfg_id, delta, rule in cp.metrics_gateway.scale_events:
         print(f"  t={t - t0:7.1f}s  config {cfg_id}  {delta:+d}  ({rule})")
-    fin = sum(1 for r in wl.requests if r.status.value == "finished")
-    print(f"\nfinished {fin}/{len(wl.requests)} requests; "
-          f"final instances: {len(cp.ready_endpoints(MODEL))}")
+    expired = sum(1 for s in streams
+                  if s.error is not None and s.error.code == "model_not_ready")
+    print(f"\nfinished {finished()}/{len(wl.requests)} requests "
+          f"({len(rejected)} rejected at the gateway, {expired} expired "
+          f"in-queue); final instances: {len(cp.ready_endpoints(MODEL))}")
+    done = [s for s in streams if s.ok]
+    if done:
+        usage = done[0].response().usage
+        print(f"sample usage block: {usage.to_dict()}")
     rs = cp.web_gateway.router_stats()
     print(f"router policy={rs['policy']}  picks={rs['picks']}")
     print(f"gateway queue: {rs['queue']}")

@@ -1,0 +1,26 @@
+"""OpenAI-compatible serving API layer (paper §3.1.2).
+
+Typed wire schemas, the status-code → structured-error taxonomy, SSE-
+analogue `TokenStream` sessions, and the `ServingClient` facade.  This
+package is the stable surface clients program against; `repro.core` (the
+gateway) imports it, never the other way around.
+"""
+from repro.api.client import PendingCompletion, ServingClient
+from repro.api.errors import (APIError, APIStatusError, ERROR_TABLE,
+                              ErrorSpec, SUCCESS_STATUSES, error_for_status,
+                              validation_error)
+from repro.api.schemas import (ChatChoice, ChatCompletionChunk,
+                               ChatCompletionRequest, ChatCompletionResponse,
+                               ChatMessage, ChunkChoice, ChunkDelta,
+                               CompletionChoice, CompletionRequest,
+                               CompletionResponse, Usage, encode_text)
+from repro.api.streaming import TokenEvent, TokenStream
+
+__all__ = [
+    "APIError", "APIStatusError", "ChatChoice", "ChatCompletionChunk",
+    "ChatCompletionRequest", "ChatCompletionResponse", "ChatMessage",
+    "ChunkChoice", "ChunkDelta", "CompletionChoice", "CompletionRequest",
+    "CompletionResponse", "ERROR_TABLE", "ErrorSpec", "PendingCompletion",
+    "ServingClient", "SUCCESS_STATUSES", "TokenEvent", "TokenStream",
+    "Usage", "encode_text", "error_for_status", "validation_error",
+]

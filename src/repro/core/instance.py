@@ -43,10 +43,26 @@ class VLLMInstance:
         for seq in list(self.engine.scheduler.running):
             self.engine.scheduler.finish_seq(seq, RequestStatus.FAILED)
             self.engine.metrics.requests_failed += 1
+            self._fail_stream(seq.req)
         for req in list(self.engine.scheduler.waiting):
             req.status = RequestStatus.FAILED
             self.engine.metrics.requests_failed += 1
+            self._fail_stream(req)
         self.engine.scheduler.waiting.clear()
+
+    def _fail_stream(self, req: Request):
+        """Deliver a terminal 462 error event on the request's TokenStream
+        (if the API layer attached one) so streaming clients see the loss
+        instead of waiting forever.  Duck-typed: this layer must not depend
+        on repro.api for requests submitted directly."""
+        stream = getattr(req.on_token, "__self__", None)
+        if stream is None or not hasattr(stream, "fail"):
+            return
+        from repro.api.errors import error_for_status
+        stream.fail(error_for_status(
+            462, retry_after=getattr(stream, "retry_after_hint", None),
+            message=f"Instance {self.node}:{self.port} terminated "
+                    f"mid-request (Slurm job cancelled or node failed)."))
 
     # -- API surface ---------------------------------------------------------
     def health(self) -> int:

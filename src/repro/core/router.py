@@ -303,6 +303,7 @@ class QueuedRequest:
     deadline: float
     # re-dispatch closure supplied by the gateway (captures auth context)
     dispatch: Callable[[Request], int] = field(repr=False, default=None)
+    attempts: int = 0          # dispatch attempts (observability / tests)
 
 
 class GatewayQueue:
@@ -372,6 +373,7 @@ class GatewayQueue:
         n = 0
         while q and can_dispatch(model_name):
             item = q.popleft()
+            item.attempts += 1
             status = item.dispatch(item.req)
             if status != 200:
                 # endpoint vanished between the check and the dispatch:

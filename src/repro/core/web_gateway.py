@@ -5,12 +5,21 @@ encrypted store with a TTL'd distributed memory cache; strong request
 validation; endpoint lookup in ai_model_endpoints; forwarding with all
 request parameters; custom status codes when no ready endpoint exists.
 
+The wire contract lives in `repro.api` (see docs/api.md): `api_handle`
+returns ``(status, TokenStream, APIError | None)`` — the structured-error
+mapping of the paper's custom codes (401/422/460/461/462) with
+``retry_after`` derived from the queue TTL / scale-up cooldown.  Streaming
+goes through an explicit `TokenStream` session installed once per request;
+each dispatch attempt *rebinds* the per-dispatch state (router finish hook,
+response-hop delay) instead of re-wrapping `req.on_token`, so queue
+re-dispatch cannot stack callbacks.  `handle` remains the thin int-status
+view used inside `core/` and tests.
+
 Endpoint selection is delegated to a pluggable `RoutingPolicy`
-(repro.core.router): round-robin (paper/seed default), least-loaded,
-session-affinity or prefix-aware. With `ServiceConfig.queue_capacity > 0`
-the gateway additionally holds would-be-461 requests in a bounded TTL
-queue and drains them when the controller brings an instance up — the
-production-stack "router-side request queuing" design.
+(repro.core.router).  With `ServiceConfig.queue_capacity > 0` the gateway
+additionally holds would-be-461 requests in a bounded TTL queue and drains
+them when the controller brings an instance up; expired entries deliver a
+terminal 461 error event on their stream (no caller left hanging on a 202).
 
 Latency accounting (virtual clock): every hop/db trip adds to the request's
 client-observed times — this is what the Table-1 "Web Gateway vs vLLM node"
@@ -21,16 +30,20 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
+from repro.api.errors import APIError, error_for_status, validation_error
+from repro.api.streaming import TokenStream
 from repro.config import ServiceConfig
 from repro.core.db import Database
 from repro.core.router import GatewayQueue, endpoint_key, make_policy
 from repro.core.simclock import EventLoop
 from repro.engine.request import Request, RequestStatus
 
-# custom HTTP-ish status codes (paper: "custom status codes are returned")
+# custom HTTP-ish status codes (paper: "custom status codes are returned");
+# the OpenAI-style wire mapping is repro.api.errors.ERROR_TABLE
 OK = 200
 QUEUED = 202                 # held in the gateway queue (queuing enabled)
 UNAUTHENTICATED = 401
+VALIDATION_FAILED = 422
 MODEL_UNKNOWN = 460          # no configuration for requested model
 MODEL_NOT_READY = 461        # configured but no ready endpoint yet
 INSTANCE_UNREACHABLE = 462   # endpoint row exists but instance is gone
@@ -106,28 +119,49 @@ class WebGateway:
                 return True
         return False
 
+    def _retry_after(self) -> float:
+        """Retry hint for 461/462: the queue TTL when queuing is enabled
+        (a queued twin would be held that long), else the autoscaler's
+        scale-up cooldown — the earliest a retry could find new capacity."""
+        return self.queue.ttl if self.queue.enabled \
+            else self.services.retry_after_cooldown
+
     # ------------------------------------------------------------------
     def handle(self, api_key: str, model_name: str, req: Request) -> int:
-        """One inference request. Returns status; on 200 the request has
-        been forwarded (arrival at the engine = now + gateway latency);
-        on 202 it is held in the gateway queue."""
+        """Int-status view of `api_handle` (used inside core/ and tests)."""
+        return self.api_handle(api_key, model_name, req)[0]
+
+    def api_handle(self, api_key: str, model_name: str, req: Request,
+                   kind: str = "chat"
+                   ) -> tuple[int, TokenStream, Optional[APIError]]:
+        """One inference request.  Returns (status, stream, error):
+        200 — forwarded (arrival at the engine = now + gateway latency);
+        202 — held in the gateway queue, stream stays open;
+        else — terminal: `error` is the structured wire object and the
+        stream has been closed with it."""
         now = self.loop.now
         self.stats.requests += 1
         req.metrics.gateway_time = now
+        if not req.model:
+            req.model = model_name
+        stream = TokenStream.ensure(req, model=model_name, kind=kind)
 
         try:
             req.sampling.validate()    # strong typing/validation layer
-        except ValueError:
-            return self._status(422)
+        except ValueError as e:
+            err = validation_error(getattr(e, "param", None), str(e))
+            return self._reject(VALIDATION_FAILED, stream, err)
 
         tenant, t_auth = self._authenticate(api_key, now)
         if tenant is None:
             self.stats.rejected_auth += 1
-            return self._status(UNAUTHENTICATED)
+            return self._reject(UNAUTHENTICATED, stream,
+                                error_for_status(UNAUTHENTICATED))
 
         if not self.db["ai_model_configurations"].select(
                 model_name=model_name):
-            return self._status(MODEL_UNKNOWN)
+            return self._reject(MODEL_UNKNOWN, stream,
+                                error_for_status(MODEL_UNKNOWN))
 
         self.stats.db_trips += 1
         status = self._route_and_forward(model_name, req, t_auth=t_auth)
@@ -135,9 +169,17 @@ class WebGateway:
             if self.queue.offer(
                     req, model_name, now,
                     dispatch=lambda r: self._route_and_forward(model_name, r)):
-                return self._status(QUEUED)
+                return self._status(QUEUED), stream, None
             self.stats.rejected_no_endpoint += 1
-        return self._status(status)
+        if status != OK:
+            return self._reject(status, stream, error_for_status(
+                status, retry_after=self._retry_after()))
+        return self._status(OK), stream, None
+
+    def _reject(self, status: int, stream: TokenStream, err: APIError
+                ) -> tuple[int, TokenStream, APIError]:
+        stream.fail(err)
+        return self._status(status), stream, err
 
     def _route_and_forward(self, model_name: str, req: Request,
                            t_auth: Optional[float] = None) -> int:
@@ -164,28 +206,29 @@ class WebGateway:
 
     def _forward(self, ep: dict, inst, req: Request, t_auth: float):
         delay = t_auth + self.lat.endpoint_db_trip + self.lat.forward_hop
-        # response streaming: client-side timestamps add the return hop
-        user_cb = req.on_token
-        # a re-dispatched request (queue-drain retry, or a client retry after
-        # its first instance died mid-hop) already carries this gateway's
-        # wrapper: unwrap back to the original client callback so the
-        # response hop is not added twice and note_finish does not fire for
-        # a stale endpoint key
-        if hasattr(user_cb, "_gateway_client_cb"):
-            user_cb = user_cb._gateway_client_cb
         key = endpoint_key(ep)
-
-        def on_token(r, tok, t):
-            if user_cb is not None:
-                user_cb(r, tok, t + self.lat.response_hop)
-            if r.is_finished(tok):
-                self.router.note_finish(key, r)
-
-        on_token._gateway_client_cb = user_cb
-        req.on_token = on_token
+        stream = TokenStream.ensure(req)
+        # rebind (never wrap): response streaming adds the return hop to
+        # client-side timestamps, and the finish hook releases this
+        # dispatch's endpoint slot in the router
+        epoch = stream.bind(
+            finish_hook=lambda r: self.router.note_finish(key, r),
+            transport_delay=self.lat.response_hop)
+        stream.retry_after_hint = self._retry_after()
         self.router.note_dispatch(ep, req)
-        self.loop.call_after(delay,
-                             lambda: inst.submit(req, bearer=ep["bearer_token"]))
+
+        def submit():
+            if inst.submit(req, bearer=ep["bearer_token"]) != 200:
+                # the instance died during the forward hop: deliver a
+                # terminal error instead of losing the request silently
+                # (ignored if a newer dispatch took over — stale epoch);
+                # fail() fires the finish hook, releasing the router slot
+                if stream.fail(error_for_status(
+                        INSTANCE_UNREACHABLE,
+                        retry_after=self._retry_after()), epoch=epoch):
+                    req.status = RequestStatus.FAILED
+
+        self.loop.call_after(delay, submit)
         self.stats.forwarded += 1
 
     # -- router-side queue --------------------------------------------------
@@ -198,10 +241,16 @@ class WebGateway:
     def _queue_tick(self, now: float = None):
         now = self.loop.now if now is None else now
         for item in self.queue.expire(now):
-            # TTL exceeded: answer with the paper's 461 after the fact
+            # TTL exceeded: answer with the paper's 461 after the fact —
+            # a terminal error event on the stream, so no caller that got
+            # a 202 is left hanging forever
             item.req.status = RequestStatus.FAILED
             self.stats.rejected_no_endpoint += 1
             self._status(MODEL_NOT_READY)
+            TokenStream.ensure(item.req).fail(error_for_status(
+                MODEL_NOT_READY, retry_after=self._retry_after(),
+                message=f"Request expired after {self.queue.ttl:.0f}s in the "
+                        f"gateway queue with no endpoint ready."))
         for model_name in self.queue.models():
             self._drain(model_name)
 

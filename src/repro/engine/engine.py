@@ -87,6 +87,8 @@ class LLMEngine:
             req.on_token(req, token, now)
         if req.is_finished(token):
             req.metrics.finish_time = now
+            req.metrics.prompt_tokens = req.prompt_len
+            req.metrics.completion_tokens = req.output_len
             self.metrics.record_finish(req)
             self.scheduler.finish_seq(seq)
             return True

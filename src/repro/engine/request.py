@@ -21,6 +21,15 @@ class RequestStatus(enum.Enum):
     FAILED = "failed"
 
 
+class SamplingValidationError(ValueError):
+    """Validation failure carrying the offending field name, so the API
+    layer can surface a structured 422 error object with ``param`` set."""
+
+    def __init__(self, param: str, message: str):
+        self.param = param
+        super().__init__(message)
+
+
 @dataclass
 class SamplingParams:
     temperature: float = 1.0
@@ -35,14 +44,38 @@ class SamplingParams:
     def validate(self):
         """Gateway-side strong typing/validation (paper: 'request properties
         are strongly typed and validated')."""
-        if not (0.0 <= self.temperature <= 2.0):
-            raise ValueError(f"temperature {self.temperature} out of [0,2]")
-        if not (0.0 < self.top_p <= 1.0):
-            raise ValueError(f"top_p {self.top_p} out of (0,1]")
-        if self.top_k < 0:
-            raise ValueError("top_k must be >= 0")
-        if self.max_new_tokens < 1:
-            raise ValueError("max_new_tokens must be >= 1")
+        if not isinstance(self.temperature, (int, float)) \
+                or isinstance(self.temperature, bool) \
+                or not (0.0 <= self.temperature <= 2.0):
+            raise SamplingValidationError(
+                "temperature", f"temperature {self.temperature!r} must be a "
+                               f"number in [0, 2]")
+        if not isinstance(self.top_p, (int, float)) \
+                or isinstance(self.top_p, bool) \
+                or not (0.0 < self.top_p <= 1.0):
+            raise SamplingValidationError(
+                "top_p", f"top_p {self.top_p!r} must be a number in (0, 1]")
+        if type(self.top_k) is not int or self.top_k < 0:
+            raise SamplingValidationError(
+                "top_k", f"top_k {self.top_k!r} must be a non-negative int")
+        if type(self.max_new_tokens) is not int or self.max_new_tokens < 1:
+            raise SamplingValidationError(
+                "max_new_tokens",
+                f"max_new_tokens {self.max_new_tokens!r} must be an int >= 1")
+        if self.target_output_len is not None and (
+                type(self.target_output_len) is not int
+                or self.target_output_len < 1):
+            raise SamplingValidationError(
+                "target_output_len",
+                f"target_output_len {self.target_output_len!r} must be an "
+                f"int >= 1 (or None)")
+        if type(self.seed) is not int:
+            raise SamplingValidationError(
+                "seed", f"seed {self.seed!r} must be an int")
+        if self.stop_token is not None and type(self.stop_token) is not int:
+            raise SamplingValidationError(
+                "stop_token",
+                f"stop_token {self.stop_token!r} must be an int (or None)")
 
 
 @dataclass
@@ -53,6 +86,10 @@ class RequestMetrics:
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
     preemptions: int = 0
+    # token accounting recorded by the engine at finish; the API layer's
+    # Usage block is built from these (OpenAI usage.prompt/completion_tokens)
+    prompt_tokens: int = 0
+    completion_tokens: int = 0
 
     @property
     def queue_time(self) -> Optional[float]:
@@ -93,6 +130,9 @@ class Request:
     # multi-turn chat / tenant key used by session-affinity routing; None
     # for one-shot requests (router falls back to round-robin)
     session_id: Optional[str] = None
+    # wire-level scheduling hint (per-tenant fairness, ROADMAP); carried
+    # end-to-end so later PRs can act on it without a schema change
+    priority: int = 0
     status: RequestStatus = RequestStatus.WAITING
     output_tokens: list = field(default_factory=list)
     metrics: RequestMetrics = field(default_factory=RequestMetrics)
@@ -122,6 +162,18 @@ class Request:
         stop = self.sampling.stop_token
         return (stop is not None and token is not None and token == stop
                 and self.sampling.target_output_len is None)
+
+    def finish_reason(self, token: Optional[int] = None) -> Optional[str]:
+        """OpenAI-style reason matching is_finished (None while running).
+        The single source of truth consumed by the API layer's streams —
+        new finish conditions must be added here, next to is_finished."""
+        stop = self.sampling.stop_token
+        if (stop is not None and token is not None and token == stop
+                and self.sampling.target_output_len is None):
+            return "stop"
+        if self.output_len >= self.target_len():
+            return "length"
+        return None
 
 
 def _next_id() -> int:

@@ -23,6 +23,7 @@ def main():
     args = ap.parse_args()
 
     from repro import configs
+    from repro.api import CompletionRequest, ServingClient
     from repro.config import HARDWARE, TPU_V5E
     from repro.core.controller import ClusterSpec, ControlPlane
     from repro.data.burstgpt import bursty_poisson
@@ -54,13 +55,16 @@ def main():
     print(f"ready endpoints: {[(e['node'], e['port']) for e in cp.ready_endpoints(cfg.name)]}")
 
     t0 = cp.loop.now
+    client = ServingClient(cp, api_key="sk-serve", default_model=cfg.name)
+    streams, submit = client.submitter()
+
     wl = bursty_poisson(args.rate, args.duration, seed=0,
                         vocab=min(cfg.vocab_size, 32000))
     for req, at in zip(wl.requests, wl.arrivals):
-        cp.loop.call_at(t0 + at, lambda r=req: cp.web_gateway.handle(
-            "sk-serve", cfg.name, r))
+        wire = CompletionRequest.from_engine(req, cfg.name, stream=True)
+        cp.loop.call_at(t0 + at, lambda w=wire: submit(w))
     cp.run_until(t0 + args.duration + 120.0)
-    fin = sum(1 for r in wl.requests if r.status.value == "finished")
+    fin = sum(1 for s in streams if s.ok)
     print(f"finished {fin}/{len(wl.requests)}; gateway stats: "
           f"{cp.web_gateway.stats}")
     print(f"scale events: {cp.metrics_gateway.scale_events}")

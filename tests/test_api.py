@@ -1,0 +1,496 @@
+"""Wire-contract tests for the OpenAI-compatible serving API layer.
+
+Covers: the exhaustive status-code → error-object golden mapping,
+round-trip (`to_dict`/`from_dict`) schema tests for every request /
+response / chunk type, strict field-addressed validation (422 + param),
+`TokenStream` semantics (single install, rebind-not-rewrap, terminal
+delivery on queue expiry and instance death), the `ServingClient` facade
+end-to-end, and streaming parity with the pre-redesign `on_token` path.
+
+CI runs this file in isolation first (`pytest tests/test_api.py -q`) so a
+wire-contract break fails fast with a readable name.
+"""
+import pytest
+
+from repro import configs
+from repro.api import (APIError, APIStatusError, ChatCompletionChunk,
+                       ChatCompletionRequest, ChatCompletionResponse,
+                       ChatChoice, ChatMessage, ChunkChoice, ChunkDelta,
+                       CompletionChoice, CompletionRequest,
+                       CompletionResponse, ERROR_TABLE, ServingClient,
+                       SUCCESS_STATUSES, TokenStream, Usage, encode_text,
+                       error_for_status)
+from repro.config import ServiceConfig
+from repro.core.controller import ClusterSpec, ControlPlane
+from repro.data.burstgpt import bursty_poisson
+from repro.engine.request import (Request, SamplingParams,
+                                  SamplingValidationError)
+
+MODEL = "mistral-small-24b"
+
+
+def mk_plane(services=None, **kw):
+    spec = ClusterSpec(num_nodes=kw.pop("num_nodes", 4),
+                       gpus_per_node=kw.pop("gpus_per_node", 2),
+                       max_num_seqs=16, num_blocks=512, block_size=16,
+                       max_model_len=kw.pop("max_model_len", 2048),
+                       services=services or ServiceConfig(), **kw)
+    cp = ControlPlane(spec)
+    cp.add_tenant("uni", "sk-test")
+    return cp
+
+
+def ready_plane(services=None, **kw):
+    cp = mk_plane(services=services, **kw)
+    cp.add_model(configs.get(MODEL), instances=1, est_load_time=10.0)
+    cp.run_until(60.0)
+    assert cp.ready_endpoints(MODEL)
+    return cp
+
+
+# ---------------------------------------------------------------------------
+# golden: the exhaustive status-code -> error-object mapping
+# ---------------------------------------------------------------------------
+
+GOLDEN = {
+    200: None,
+    202: None,
+    401: ("authentication_error", "invalid_api_key", False),
+    422: ("invalid_request_error", "invalid_value", False),
+    460: ("invalid_request_error", "model_not_found", False),
+    461: ("service_unavailable_error", "model_not_ready", True),
+    462: ("service_unavailable_error", "instance_unreachable", True),
+}
+
+
+def test_taxonomy_is_exhaustive():
+    """Every status the gateway can emit is in exactly one of the tables."""
+    assert set(ERROR_TABLE) | set(SUCCESS_STATUSES) == set(GOLDEN)
+    assert not set(ERROR_TABLE) & set(SUCCESS_STATUSES)
+
+
+@pytest.mark.parametrize("status", sorted(GOLDEN))
+def test_status_to_error_golden(status):
+    err = error_for_status(status, retry_after=12.5)
+    if GOLDEN[status] is None:
+        assert err is None
+        return
+    etype, code, retryable = GOLDEN[status]
+    assert err.http_status == status
+    assert err.type == etype
+    assert err.code == code
+    assert err.message
+    # retry_after survives only on retryable statuses
+    assert err.retry_after == (12.5 if retryable else None)
+    # wire round-trip
+    assert APIError.from_dict(err.to_dict()) == err
+    assert err.to_dict()["error"]["code"] == code
+
+
+def test_unknown_status_is_a_contract_break():
+    with pytest.raises(KeyError):
+        error_for_status(500)
+
+
+# ---------------------------------------------------------------------------
+# round-trip schema tests (to_dict/from_dict) for every wire type
+# ---------------------------------------------------------------------------
+
+USAGE = Usage(prompt_tokens=24, completion_tokens=10)
+
+ROUND_TRIP_CASES = [
+    ChatMessage(role="user", content=[5, 6, 7]),
+    ChatMessage(role="system", content="hello"),
+    ChatCompletionRequest(model=MODEL,
+                          messages=[ChatMessage("system", [1, 2]),
+                                    ChatMessage("user", [3, 4])],
+                          temperature=0.5, top_k=40, top_p=0.9,
+                          max_tokens=64, stream=True, priority=2,
+                          session_id="chat-9", seed=7, stop_token=2,
+                          target_output_len=32),
+    CompletionRequest(model=MODEL, prompt=[9, 8, 7], temperature=0.0,
+                      max_tokens=16, stream=False, priority=-1,
+                      session_id=None, target_output_len=None),
+    USAGE,
+    ChatCompletionResponse(
+        id="chatcmpl-1", model=MODEL, created=12.25,
+        choices=[ChatChoice(index=0,
+                            message=ChatMessage("assistant", [11, 12]),
+                            finish_reason="length")],
+        usage=USAGE),
+    CompletionResponse(
+        id="cmpl-2", model=MODEL, created=3.5,
+        choices=[CompletionChoice(index=0, tokens=[4, 5],
+                                  finish_reason="stop")],
+        usage=USAGE),
+    ChatCompletionChunk(
+        id="chatcmpl-1", model=MODEL, created=12.5,
+        choices=[ChunkChoice(index=0,
+                             delta=ChunkDelta(content=[42],
+                                              role="assistant"),
+                             finish_reason=None)]),
+    ChatCompletionChunk(
+        id="chatcmpl-1", model=MODEL, created=13.0,
+        choices=[ChunkChoice(index=0, delta=ChunkDelta(content=[43]),
+                             finish_reason="length")],
+        usage=USAGE),
+]
+
+
+@pytest.mark.parametrize("obj", ROUND_TRIP_CASES,
+                         ids=lambda o: type(o).__name__)
+def test_schema_round_trip(obj):
+    wire = obj.to_dict()
+    back = type(obj).from_dict(wire)
+    assert back == obj
+    assert back.to_dict() == wire
+
+
+def test_chat_request_to_engine_request():
+    req = ChatCompletionRequest(
+        model=MODEL, messages=[ChatMessage("system", [1, 2]),
+                               ChatMessage("user", "hi")],
+        temperature=0.5, top_k=3, max_tokens=9, priority=4,
+        session_id="s1", stop_token=7, target_output_len=5)
+    ereq = req.to_engine_request()
+    assert ereq.prompt_tokens == [1, 2] + encode_text("hi")
+    assert ereq.model == MODEL and ereq.session_id == "s1"
+    assert ereq.priority == 4
+    sp = ereq.sampling
+    assert (sp.temperature, sp.top_k, sp.max_new_tokens,
+            sp.stop_token, sp.target_output_len) == (0.5, 3, 9, 7, 5)
+
+
+# ---------------------------------------------------------------------------
+# validation: strict typing + structured 422 with the offending field
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("field,value", [
+    ("top_k", 1.5), ("top_k", True), ("top_k", -1),
+    ("max_new_tokens", 2.0), ("max_new_tokens", 0),
+    ("target_output_len", 0), ("target_output_len", 1.0),
+    ("temperature", 3.0), ("temperature", "hot"), ("top_p", 0.0),
+    ("seed", "x"), ("seed", 1.5), ("stop_token", 2.5),
+])
+def test_sampling_params_reject_bad_fields(field, value):
+    sp = SamplingParams(**{field: value})
+    with pytest.raises(SamplingValidationError) as ei:
+        sp.validate()
+    assert ei.value.param == field
+
+
+@pytest.mark.parametrize("fields,param", [
+    (dict(model=""), "model"),
+    (dict(messages=[]), "messages"),
+    (dict(messages=[ChatMessage("robot", [1])]), "messages[0].role"),
+    (dict(messages=[ChatMessage("user", [1, -2])]), "messages[0].content"),
+    (dict(max_tokens=0), "max_tokens"),
+    (dict(max_tokens="many"), "max_tokens"),
+    (dict(stream=1), "stream"),
+    (dict(priority="high"), "priority"),
+    (dict(session_id=42), "session_id"),
+    (dict(temperature=-1.0), "temperature"),
+    (dict(top_k=0.5), "top_k"),
+    (dict(target_output_len=0), "target_output_len"),
+])
+def test_chat_request_validation_names_offending_field(fields, param):
+    base = dict(model=MODEL, messages=[ChatMessage("user", [1, 2, 3])])
+    base.update(fields)
+    req = ChatCompletionRequest(**base)
+    with pytest.raises(APIStatusError) as ei:
+        req.validate()
+    assert ei.value.status == 422
+    assert ei.value.error.code == "invalid_value"
+    assert ei.value.error.param == param
+
+
+def test_completion_request_rejects_empty_prompts():
+    for prompt in ([], ""):
+        with pytest.raises(APIStatusError) as ei:
+            CompletionRequest(model=MODEL, prompt=prompt).validate()
+        assert ei.value.status == 422
+        assert ei.value.error.param == "prompt"
+
+
+def test_client_rejects_request_object_plus_field_overrides():
+    cp = ready_plane()
+    client = ServingClient(cp, api_key="sk-test")
+    wire = CompletionRequest(model=MODEL, prompt=[1, 2])
+    with pytest.raises(TypeError):
+        client.completions(wire, stream=True)
+
+
+def test_gateway_answers_422_error_object_for_bad_sampling():
+    cp = ready_plane()
+    bad = Request(prompt_tokens=[1] * 8,
+                  sampling=SamplingParams(top_k=1.5))
+    status, stream, err = cp.web_gateway.api_handle("sk-test", MODEL, bad)
+    assert status == 422
+    assert err.param == "top_k" and err.code == "invalid_value"
+    assert stream.closed and stream.error is err
+
+
+# ---------------------------------------------------------------------------
+# TokenStream semantics
+# ---------------------------------------------------------------------------
+
+def test_token_stream_single_install_and_legacy_fold_in():
+    seen = []
+    r = Request(prompt_tokens=[1, 2],
+                sampling=SamplingParams(target_output_len=2,
+                                        max_new_tokens=2))
+    r.on_token = lambda rq, tok, t: seen.append((tok, t))
+    s1 = TokenStream.ensure(r, model=MODEL)
+    s2 = TokenStream.ensure(r)            # idempotent: same session
+    assert s1 is s2
+    s1.bind(finish_hook=None, transport_delay=0.25)
+    r.output_tokens.append(7)
+    r.on_token(r, 7, 1.0)                 # engine-side emit
+    assert seen == [(7, 1.25)]            # legacy cb got the client time
+    assert s1.events[0].t == 1.25 and not s1.closed
+    r.output_tokens.append(8)
+    r.on_token(r, 8, 2.0)
+    assert s1.closed and s1.finish_reason == "length"
+    assert s1.output_tokens == [7, 8]
+
+
+def test_token_stream_stale_dispatch_cannot_fail_a_retry():
+    r = Request(prompt_tokens=[1],
+                sampling=SamplingParams(target_output_len=1,
+                                        max_new_tokens=1))
+    s = TokenStream.ensure(r)
+    e1 = s.bind(finish_hook=None)
+    e2 = s.bind(finish_hook=None)         # re-dispatch supersedes
+    assert not s.fail(error_for_status(462), epoch=e1)   # stale: ignored
+    assert not s.closed
+    assert s.fail(error_for_status(462), epoch=e2)
+    assert s.closed and s.finish_reason == "error"
+
+
+def test_token_stream_finish_reason_stop_token():
+    r = Request(prompt_tokens=[1],
+                sampling=SamplingParams(max_new_tokens=8, stop_token=99))
+    s = TokenStream.ensure(r)
+    r.output_tokens.append(99)
+    r.on_token(r, 99, 1.0)
+    assert s.closed and s.finish_reason == "stop"
+
+
+def test_token_stream_chunks_shape():
+    r = Request(prompt_tokens=[1, 2, 3],
+                sampling=SamplingParams(target_output_len=2,
+                                        max_new_tokens=2))
+    s = TokenStream.ensure(r, model=MODEL)
+    for i, (tok, t) in enumerate([(5, 1.0), (6, 2.0)]):
+        r.output_tokens.append(tok)
+        r.on_token(r, tok, float(t))
+    r.metrics.finish_time = 2.0
+    r.metrics.prompt_tokens, r.metrics.completion_tokens = 3, 2
+    chunks = s.chunks()
+    assert [c.choices[0].delta.content for c in chunks] == [[5], [6]]
+    assert chunks[0].choices[0].delta.role == "assistant"
+    assert chunks[0].choices[0].finish_reason is None
+    assert chunks[-1].choices[0].finish_reason == "length"
+    assert chunks[-1].usage.completion_tokens == 2
+    assert chunks[0].usage is None
+    # chunk round-trip straight off a live stream
+    for c in chunks:
+        assert ChatCompletionChunk.from_dict(c.to_dict()) == c
+
+
+# ---------------------------------------------------------------------------
+# ServingClient end-to-end (full control plane on the virtual clock)
+# ---------------------------------------------------------------------------
+
+def test_client_chat_blocking_result_with_usage():
+    cp = ready_plane()
+    client = ServingClient(cp, api_key="sk-test", default_model=MODEL)
+    pending = client.chat(
+        messages=[ChatMessage("system", [1] * 4), ChatMessage("user", [2] * 4)],
+        max_tokens=6, target_output_len=6)
+    assert pending.status == 200 and not pending.done
+    resp = pending.result()
+    assert isinstance(resp, ChatCompletionResponse)
+    assert resp.model == MODEL
+    assert resp.choices[0].finish_reason == "length"
+    assert len(resp.choices[0].message.content) == 6
+    assert resp.usage.prompt_tokens == 8
+    assert resp.usage.completion_tokens == 6
+    assert resp.usage.total_tokens == 14
+    assert resp.usage.completion_tokens == pending.request.output_len
+
+
+def test_client_completions_streaming():
+    cp = ready_plane()
+    client = ServingClient(cp, api_key="sk-test", default_model=MODEL)
+    got = []
+    stream = client.completions(prompt=[3] * 10, max_tokens=4,
+                                target_output_len=4, stream=True)
+    stream.subscribe(lambda r, tok, t: got.append((tok, t)))
+    cp.run_until(cp.loop.now + 60.0)
+    assert stream.closed and stream.error is None
+    assert [tok for tok, _ in got] == stream.output_tokens
+    resp = stream.response()
+    assert isinstance(resp, CompletionResponse)
+    assert resp.choices[0].tokens == stream.output_tokens
+    assert resp.usage.completion_tokens == 4
+
+
+@pytest.mark.parametrize("api_key,model,status,code", [
+    ("sk-wrong", MODEL, 401, "invalid_api_key"),
+    ("sk-test", "no-such-model", 460, "model_not_found"),
+])
+def test_client_raises_structured_errors(api_key, model, status, code):
+    cp = ready_plane()
+    client = ServingClient(cp, api_key=api_key)
+    with pytest.raises(APIStatusError) as ei:
+        client.completions(model=model, prompt=[1] * 4, max_tokens=2)
+    assert ei.value.status == status
+    assert ei.value.error.code == code
+
+
+def test_client_not_ready_carries_retry_after():
+    cp = mk_plane()                       # queue disabled
+    cp.add_model(configs.get(MODEL), instances=1, est_load_time=500.0)
+    client = ServingClient(cp, api_key="sk-test", default_model=MODEL)
+    with pytest.raises(APIStatusError) as ei:
+        client.completions(prompt=[1] * 4, max_tokens=2)
+    assert ei.value.status == 461
+    assert ei.value.error.retry_after == \
+        cp.web_gateway.services.retry_after_cooldown
+
+
+def test_client_queued_request_drains_and_completes():
+    svc = ServiceConfig(queue_capacity=8, queue_ttl=300.0)
+    cp = mk_plane(services=svc)
+    cp.add_model(configs.get(MODEL), instances=1, est_load_time=30.0)
+    client = ServingClient(cp, api_key="sk-test", default_model=MODEL)
+    pending = client.completions(prompt=[1] * 8, max_tokens=3,
+                                 target_output_len=3)
+    assert pending.status == 202          # parked in the gateway queue
+    resp = pending.result()
+    assert resp.usage.completion_tokens == 3
+
+
+def test_queue_expiry_delivers_terminal_error_event():
+    """Satellite fix: a caller holding a 202 must get a terminal error when
+    its queued request expires — not hang forever."""
+    svc = ServiceConfig(queue_capacity=4, queue_ttl=10.0)
+    cp = mk_plane(services=svc)
+    cp.add_model(configs.get(MODEL), instances=1, est_load_time=500.0)
+    client = ServingClient(cp, api_key="sk-test", default_model=MODEL)
+    pending = client.completions(prompt=[1] * 8, max_tokens=2)
+    assert pending.status == 202
+    done = []
+    pending.stream.on_done(done.append)
+    cp.run_until(30.0)
+    assert done, "no terminal event delivered on queue expiry"
+    err = done[0].error
+    assert err.code == "model_not_ready" and err.http_status == 461
+    assert err.retry_after == svc.queue_ttl
+    with pytest.raises(APIStatusError) as ei:
+        pending.response()
+    assert ei.value.status == 461
+    assert pending.request.status.value == "failed"
+
+
+def test_instance_death_fails_open_streams():
+    cp = ready_plane()
+    client = ServingClient(cp, api_key="sk-test", default_model=MODEL)
+    stream = client.completions(prompt=[1] * 600, max_tokens=400,
+                                target_output_len=400, stream=True)
+    cp.run_until(cp.loop.now + 0.5)       # in flight, far from done
+    assert not stream.closed
+    for inst in list(cp.registry.values()):
+        inst.kill()
+    assert stream.closed and stream.error is not None
+    assert not stream.ok
+    assert stream.error.code == "instance_unreachable"
+    assert stream.error.retry_after is not None   # 462 is retryable
+    # the chunk view also terminates: trailing chunk marked "error"
+    last = stream.chunks()[-1].choices[0]
+    assert last.finish_reason == "error" and last.delta.content == []
+
+
+def test_instance_death_releases_least_loaded_slots():
+    """A terminal stream failure must fire the router finish hook so a dead
+    endpoint's in-flight count cannot leak onto its replacement."""
+    svc = ServiceConfig(routing_policy="least_loaded")
+    cp = ready_plane(services=svc)
+    client = ServingClient(cp, api_key="sk-test", default_model=MODEL)
+    for _ in range(4):
+        client.completions(prompt=[1] * 200, max_tokens=100,
+                           target_output_len=100, stream=True)
+    cp.run_until(cp.loop.now + 0.5)
+    pol = cp.web_gateway.router
+    assert sum(pol._inflight.values()) == 4
+    for inst in list(cp.registry.values()):
+        inst.kill()
+    assert sum(pol._inflight.values()) == 0
+
+
+# ---------------------------------------------------------------------------
+# streaming parity with the pre-redesign on_token path
+# ---------------------------------------------------------------------------
+
+def _parity_plane():
+    return mk_plane(num_nodes=2, max_model_len=8192)
+
+
+def _parity_workload():
+    wl = bursty_poisson(rate=2.0, duration=5.0, seed=3)
+    for r in wl.requests:                 # keep prompts within model len
+        r.prompt_tokens = r.prompt_tokens[:1024]
+        out = min(r.sampling.target_output_len, 32)
+        r.sampling.target_output_len = out
+        r.sampling.max_new_tokens = out
+    return wl
+
+
+def test_streaming_parity_with_legacy_on_token():
+    """Acceptance: for a BurstGPT replay, TokenStream chunk timestamps must
+    equal the pre-redesign `on_token` timestamps (engine time + exactly one
+    response hop), and Usage.completion_tokens == output_len."""
+    # legacy path: raw on_token callbacks through WebGateway.handle
+    cp_a = _parity_plane()
+    cp_a.add_model(configs.get(MODEL), instances=1, est_load_time=10.0)
+    cp_a.run_until(60.0)
+    wl_a = _parity_workload()
+    legacy_times = {}
+    t0_a = cp_a.loop.now
+    for i, (r, at) in enumerate(zip(wl_a.requests, wl_a.arrivals)):
+        acc = legacy_times[i] = []
+        r.on_token = lambda rq, tok, t, acc=acc: acc.append(t)
+        cp_a.loop.call_at(t0_a + at,
+                          lambda r=r: cp_a.web_gateway.handle(
+                              "sk-test", MODEL, r))
+    cp_a.run_until(t0_a + 600.0)
+
+    # API path: identical plane + workload through ServingClient streams
+    cp_b = _parity_plane()
+    cp_b.add_model(configs.get(MODEL), instances=1, est_load_time=10.0)
+    cp_b.run_until(60.0)
+    wl_b = _parity_workload()
+    client = ServingClient(cp_b, api_key="sk-test", default_model=MODEL)
+    streams = {}
+    t0_b = cp_b.loop.now
+    assert t0_b == t0_a
+    for i, (r, at) in enumerate(zip(wl_b.requests, wl_b.arrivals)):
+        wire = CompletionRequest.from_engine(r, MODEL, stream=True)
+        cp_b.loop.call_at(
+            t0_b + at,
+            lambda w=wire, i=i: streams.__setitem__(
+                i, client.completions(w)))
+    cp_b.run_until(t0_b + 600.0)
+
+    hop = cp_b.web_gateway.lat.response_hop
+    assert len(streams) == len(legacy_times) > 0
+    for i, s in streams.items():
+        assert s.closed and s.error is None
+        chunk_ts = [c.created for c in s.chunks()]
+        assert chunk_ts == pytest.approx(legacy_times[i], abs=1e-9)
+        # absolute semantics: engine time + exactly one response hop
+        assert chunk_ts[0] == pytest.approx(
+            s.req.metrics.first_token_time + hop, abs=1e-12)
+        assert s.chunks()[-1].usage.completion_tokens == s.req.output_len
+        assert s.response().usage.completion_tokens == s.req.output_len

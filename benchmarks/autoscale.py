@@ -1,6 +1,13 @@
 """Autoscaling trace benchmark (paper §3.3): bursty open-loop load against
-one instance; the queue-time rule (>5 s sustained 30 s) must fire, the Job
-Worker must converge, and post-scale queue time must drop.
+one instance; the queue-time rule (>5 s sustained 30 s) must fire, the
+reconciler must converge, and post-scale queue time must drop.
+
+The cluster is driven exclusively through the declarative API: a
+`ModelDeploymentSpec` applied via `AdminClient` carries the replica window
+(min/max), the routing policy and the gateway-queue knobs; the firing
+alert patches ``spec.replicas`` (clamped to the window) and the
+`Reconciler` converges the endpoint jobs — no Job Worker or Autoscaler
+instance is touched directly.
 
 `run()` accepts a routing `policy` and router-side queue knobs so the
 scale-up dynamics can be compared across gateway configurations
@@ -12,8 +19,8 @@ from __future__ import annotations
 import numpy as np
 
 from repro import configs
-from repro.api import CompletionRequest, ServingClient
-from repro.config import GPU_L40S, ServiceConfig
+from repro.api import AdminClient, CompletionRequest, ServingClient
+from repro.config import GPU_L40S
 from repro.core.controller import ClusterSpec, ControlPlane
 from repro.core.router import POLICIES
 from repro.data.burstgpt import bursty_poisson
@@ -29,10 +36,7 @@ def run(duration: float = 420.0, rate: float = 5.0, seed: int = 0,
 
     spec = ClusterSpec(num_nodes=6, gpus_per_node=2, hardware=GPU_L40S,
                        max_num_seqs=8, num_blocks=512, block_size=16,
-                       max_model_len=8192, max_instances=6,
-                       services=ServiceConfig(routing_policy=policy,
-                                              queue_capacity=queue_capacity,
-                                              queue_ttl=queue_ttl))
+                       max_model_len=8192, max_instances=6)
 
     def factory(cfg, tp):
         ex = SimExecutor(cfg, GPU_L40S, tp=2, efficiency=0.5)
@@ -44,8 +48,16 @@ def run(duration: float = 420.0, rate: float = 5.0, seed: int = 0,
 
     cp = ControlPlane(spec, engine_factory=factory)
     cp.add_tenant("bench", "sk-bench")
-    cp.add_model(configs.get(MODEL), instances=1, gpus_per_node=2,
-                 est_load_time=45.0)
+    cp.register_model(configs.get(MODEL))
+    admin = AdminClient(cp)
+    # desired state: 1 replica, autoscaler may patch up to 6; routing
+    # policy and queue knobs are per-deployment spec fields
+    admin.apply(model=MODEL, replicas=1, min_replicas=1, max_replicas=6,
+                gpus_per_node=2, est_load_time=45.0,
+                routing_policy=policy,
+                queue_capacity=queue_capacity or None,
+                queue_ttl=queue_ttl if queue_capacity else None)
+    admin.wait(MODEL, "Ready", timeout=90.0)
     cp.run_until(90.0)
     t0 = cp.loop.now
 
@@ -67,6 +79,7 @@ def run(duration: float = 420.0, rate: float = 5.0, seed: int = 0,
                       default=0.0)
     tail = [v for t, v in qt if t > duration]
     finished = sum(1 for s in streams if s.ok)
+    dep = admin.get(MODEL)
     return {
         "requests": len(wl.requests),
         "finished": finished,
@@ -75,6 +88,9 @@ def run(duration: float = 420.0, rate: float = 5.0, seed: int = 0,
         "first_scale_at_s": (cp.metrics_gateway.scale_events[0][0] - t0
                              if cp.metrics_gateway.scale_events else None),
         "final_instances": len(cp.ready_endpoints(MODEL)),
+        "spec_replicas": dep.spec.replicas,
+        "observed_generation": dep.status.observed_generation,
+        "generation": dep.generation,
         "queue_time_peak_s": max((v for _, v in qt), default=0.0),
         "queue_time_peak_before_scale_s": peak_before,
         "queue_time_tail_s": float(np.mean(tail)) if tail else 0.0,

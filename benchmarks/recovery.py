@@ -1,10 +1,14 @@
-"""Fault-tolerance benchmark: kill a node mid-load, measure the control
-plane's detection latency (Endpoint Worker), reconvergence time (Job Worker
-+ Slurm + weight load) and request loss."""
+"""Fault-tolerance benchmark: kill a node mid-load; recovery is PURE
+reconciliation.  The node failure drops observed replicas below the
+`ModelDeploymentSpec` (detected by the Endpoint Worker reaping the dead
+rows) and the `Reconciler` restores them — there is no bespoke
+resubmission path.  The deployment's status conditions record the whole
+transition: Ready flips False with reason ``ReplicaFailure`` at detection
+and back True (``AllReplicasReady``) at reconvergence."""
 from __future__ import annotations
 
 from repro import configs
-from repro.api import CompletionRequest, ServingClient
+from repro.api import AdminClient, CompletionRequest, ServingClient
 from repro.config import GPU_H100
 from repro.core.controller import ClusterSpec, ControlPlane
 from repro.data.burstgpt import bursty_poisson
@@ -19,10 +23,14 @@ def run(seed: int = 0) -> dict:
                        job_worker_interval=15.0)
     cp = ControlPlane(spec)
     cp.add_tenant("bench", "sk-bench")
-    cp.add_model(configs.get(MODEL), instances=2, gpus_per_node=1,
-                 est_load_time=45.0)
-    cp.run_until(150.0)
-    assert len(cp.ready_endpoints(MODEL)) == 2
+    cp.register_model(configs.get(MODEL))
+    admin = AdminClient(cp)
+    admin.apply(model=MODEL, replicas=2, min_replicas=1, max_replicas=4,
+                gpus_per_node=1, est_load_time=45.0)
+    assert admin.wait(MODEL, "Ready", timeout=150.0)
+    cp.run_until(max(cp.loop.now, 150.0))
+    dep = admin.get(MODEL)
+    assert dep.status.ready_replicas == 2
 
     wl = bursty_poisson(3.0, 300.0, seed=seed)
     t0 = cp.loop.now
@@ -35,22 +43,16 @@ def run(seed: int = 0) -> dict:
     # kill the node hosting the first endpoint at t0+60
     victim = cp.ready_endpoints(MODEL)[0]["node"]
     t_kill = t0 + 60.0
-
     cp.loop.call_at(t_kill, lambda: cp.slurm.fail_node(victim))
-    # observe when the dead endpoint's rows disappear and when a replacement
-    # becomes ready again
-    detect, recover = [], []
-
-    def watch():
-        eps = cp.ready_endpoints(MODEL)
-        nodes = {e["node"] for e in eps}
-        if cp.loop.now > t_kill and victim not in nodes and not detect:
-            detect.append(cp.loop.now)
-        if detect and len(eps) >= 2 and not recover:
-            recover.append(cp.loop.now)
-
-    cp.loop.every(1.0, lambda now: watch())
     cp.run_until(t0 + 500.0)
+
+    # the condition-transition log IS the recovery trace: the Ready flip
+    # to False (ReplicaFailure) marks detection, the flip back marks
+    # reconvergence to spec.replicas
+    fails = [(t, reason) for t, ctype, status, reason in dep.transitions
+             if ctype == "Ready" and not status and t >= t_kill]
+    recovers = [t for t, ctype, status, reason in dep.transitions
+                if ctype == "Ready" and status and fails and t > fails[0][0]]
 
     failed = sum(1 for s in streams if s.error is not None)
     finished = sum(1 for s in streams if s.ok)
@@ -58,7 +60,11 @@ def run(seed: int = 0) -> dict:
         "requests": len(wl.requests),
         "finished": finished,
         "failed_in_flight": failed,
-        "detect_latency_s": (detect[0] - t_kill) if detect else None,
-        "recovery_latency_s": (recover[0] - t_kill) if recover else None,
-        "final_ready": len(cp.ready_endpoints(MODEL)),
+        "detect_latency_s": (fails[0][0] - t_kill) if fails else None,
+        "detect_reason": fails[0][1] if fails else None,
+        "recovery_latency_s": (recovers[0] - t_kill) if recovers else None,
+        "final_ready": dep.status.ready_replicas,
+        "spec_replicas": dep.spec.replicas,
+        "observed_generation": dep.status.observed_generation,
+        "conditions": dep.status.to_dict()["conditions"],
     }

@@ -4,13 +4,15 @@ REAL model compute.
 
     PYTHONPATH=src python examples/quickstart.py [--arch qwen3-1.7b]
 
-What happens (paper §3): the Job Worker reconciles the model configuration
-into a Slurm job; the job registers with the Endpoint Gateway (port =
-argmax+1); the Endpoint Worker marks it ready after weight load; the
-`ServingClient` validates the typed `ChatCompletionRequest`, the Web
-Gateway authenticates, looks up the endpoint and forwards; token deltas
-stream back per-step on a `TokenStream` session and the final response
-carries the OpenAI-style Usage block.
+What happens (paper §3): a declarative `ModelDeploymentSpec` is applied
+through the kubectl-shaped `AdminClient`; the Reconciler converges it into
+a Slurm job; the job registers with the Endpoint Gateway (port =
+argmax+1); the Endpoint Worker marks it ready after weight load (the
+deployment's Ready condition flips true); the `ServingClient` validates
+the typed `ChatCompletionRequest`, the Web Gateway authenticates, looks up
+the endpoint and forwards; token deltas stream back per-step on a
+`TokenStream` session and the final response carries the OpenAI-style
+Usage block.
 """
 import argparse
 import sys
@@ -21,7 +23,8 @@ import jax
 import numpy as np
 
 from repro import configs
-from repro.api import APIStatusError, ChatMessage, ServingClient
+from repro.api import (AdminClient, APIStatusError, ChatMessage,
+                       ServingClient)
 from repro.config import TPU_V5E
 from repro.core.controller import ClusterSpec, ControlPlane
 from repro.engine.engine import LLMEngine
@@ -51,11 +54,17 @@ def main():
     cp = ControlPlane(ClusterSpec(num_nodes=2, gpus_per_node=1),
                       engine_factory=factory)
     cp.add_tenant("demo", "sk-demo")
-    cp.add_model(cfg, instances=1, est_load_time=15.0)
-    cp.run_until(60.0)
+    cp.register_model(cfg)
+    admin = AdminClient(cp)
+    dep = admin.apply(model=cfg.name, replicas=1, est_load_time=15.0)
+    admin.wait(cfg.name, "Ready", timeout=60.0)
+    cp.run_until(max(cp.loop.now, 60.0))
     eps = cp.ready_endpoints(cfg.name)
+    ready_cond = dep.status.condition("Ready")
     print(f"      ready endpoints: "
-          f"{[(e['node'], e['port']) for e in eps]}")
+          f"{[(e['node'], e['port']) for e in eps]}  "
+          f"(condition Ready={ready_cond.status} since "
+          f"t={ready_cond.last_transition_time:.0f}s)")
 
     print("[3/4] sending 3 chat completions through the ServingClient")
     client = ServingClient(cp, api_key="sk-demo", default_model=cfg.name)

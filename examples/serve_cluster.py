@@ -5,11 +5,14 @@ A bursty diurnal-ish load hits one Mistral-24B instance; the Grafana rule
 jobs, load drains; when the burst passes, the idle scale-down rule returns
 capacity to the research partition (the paper's off-hours goal).
 
-The gateway runs the least-loaded routing policy with router-side request
-queuing enabled: requests that arrive before the first instance finishes
-loading are parked in the gateway queue (status 202) and drained the moment
-the Endpoint Worker flips the endpoint to ready — and the queued backlog
-itself counts toward the scale-up signal.
+The cluster is managed declaratively: one `ModelDeploymentSpec` (applied
+through the kubectl-shaped `AdminClient`) carries the replica window, the
+least-loaded routing policy and the router-side queue knobs; requests that
+arrive before the first instance finishes loading are parked in the
+gateway queue (status 202) and drained the moment the Endpoint Worker
+flips the endpoint to ready — and the queued backlog itself counts toward
+the scale-up signal, which the autoscaler turns into replica-count patches
+on the spec.
 
     PYTHONPATH=src python examples/serve_cluster.py
 """
@@ -20,8 +23,8 @@ sys.path.insert(0, "src")
 import numpy as np
 
 from repro import configs
-from repro.api import CompletionRequest, ServingClient
-from repro.config import GPU_L40S, ServiceConfig
+from repro.api import AdminClient, CompletionRequest, ServingClient
+from repro.config import GPU_L40S
 from repro.core.controller import ClusterSpec, ControlPlane
 from repro.core.autoscaler import AlertRule, GATEWAY_QUEUE_SCALE_UP
 from repro.data.burstgpt import bursty_poisson
@@ -39,14 +42,16 @@ def main():
     ]
     spec = ClusterSpec(num_nodes=8, gpus_per_node=2, hardware=GPU_L40S,
                        max_num_seqs=8, num_blocks=512, block_size=16,
-                       max_model_len=8192, max_instances=6,
-                       services=ServiceConfig(routing_policy="least_loaded",
-                                              queue_capacity=128,
-                                              queue_ttl=90.0))
+                       max_model_len=8192, max_instances=6)
     cp = ControlPlane(spec, alert_rules=rules)
     cp.add_tenant("uni", "sk-cluster")
-    cp.add_model(configs.get(MODEL), instances=1, gpus_per_node=2,
-                 est_load_time=45.0)
+    cp.register_model(configs.get(MODEL))
+    admin = AdminClient(cp)
+    watch = admin.watch()        # kubectl get -w analogue
+    admin.apply(model=MODEL, replicas=1, min_replicas=1, max_replicas=6,
+                gpus_per_node=2, est_load_time=45.0,
+                routing_policy="least_loaded",
+                queue_capacity=128, queue_ttl=90.0)
     # no warm-up wait: the earliest requests hit the gateway while the
     # first instance is still loading and ride the router-side queue
     cp.run_until(10.0)
@@ -67,30 +72,41 @@ def main():
     def finished():
         return sum(1 for s in streams if s.ok)
 
+    dep = admin.get(MODEL)
     for minute in range(16):
         cp.run_until(t0 + 60.0 * (minute + 1))
-        eps = len(cp.ready_endpoints(MODEL))
+        st = dep.status
         hist = cp.metrics_gateway.history.get(1, [])
         qt = hist[-1][1]["queue_time_max"] if hist else 0.0
         util = cp.slurm.utilization()
-        print(f"t={minute + 1:3d}min  instances={eps}  queue_time={qt:7.1f}s"
-              f"  slurm_gpu_util={util:.2f}"
+        print(f"t={minute + 1:3d}min  replicas={st.ready_replicas}"
+              f"/{dep.spec.replicas} (+{st.starting_replicas} starting,"
+              f" {st.draining_replicas} draining)"
+              f"  queue_time={qt:7.1f}s  slurm_gpu_util={util:.2f}"
               f"  finished={finished()}/{len(wl.requests)}")
 
-    print("\nscale events:")
+    print("\nscale events (alert rule -> spec patch, clamped to "
+          f"[{dep.spec.min_replicas}, {dep.spec.max_replicas}]):")
     for t, cfg_id, delta, rule in cp.metrics_gateway.scale_events:
         print(f"  t={t - t0:7.1f}s  config {cfg_id}  {delta:+d}  ({rule})")
+    print("\nwatch events:")
+    for ev in watch.events:
+        print(f"  t={ev.t:7.1f}s  {ev.type:10s} "
+              f"spec.replicas={ev.object['spec']['replicas']}  "
+              f"ready={ev.object['status']['ready_replicas']}")
+    watch.stop()
     expired = sum(1 for s in streams
                   if s.error is not None and s.error.code == "model_not_ready")
     print(f"\nfinished {finished()}/{len(wl.requests)} requests "
           f"({len(rejected)} rejected at the gateway, {expired} expired "
-          f"in-queue); final instances: {len(cp.ready_endpoints(MODEL))}")
+          f"in-queue); final status: {dep.status.to_dict()}")
     done = [s for s in streams if s.ok]
     if done:
         usage = done[0].response().usage
         print(f"sample usage block: {usage.to_dict()}")
     rs = cp.web_gateway.router_stats()
-    print(f"router policy={rs['policy']}  picks={rs['picks']}")
+    model_rs = rs.get("per_model", {}).get(MODEL, rs)
+    print(f"router policy={model_rs['policy']}  picks={model_rs['picks']}")
     print(f"gateway queue: {rs['queue']}")
 
 

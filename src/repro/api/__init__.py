@@ -1,10 +1,14 @@
-"""OpenAI-compatible serving API layer (paper §3.1.2).
+"""OpenAI-compatible serving API layer (paper §3.1.2) plus the
+declarative admin surface.
 
 Typed wire schemas, the status-code → structured-error taxonomy, SSE-
-analogue `TokenStream` sessions, and the `ServingClient` facade.  This
-package is the stable surface clients program against; `repro.core` (the
-gateway) imports it, never the other way around.
+analogue `TokenStream` sessions, the `ServingClient` facade, and the
+kubectl-shaped `AdminClient` over ModelDeployment specs (see
+docs/control_plane.md).  This package is the stable surface clients
+program against; `repro.core` (the gateway, the reconciler) imports it,
+never the other way around.
 """
+from repro.api.admin import AdminClient, DeploymentWatch, WatchEvent
 from repro.api.client import PendingCompletion, ServingClient
 from repro.api.errors import (APIError, APIStatusError, ERROR_TABLE,
                               ErrorSpec, SUCCESS_STATUSES, error_for_status,
@@ -14,13 +18,15 @@ from repro.api.schemas import (ChatChoice, ChatCompletionChunk,
                                ChatMessage, ChunkChoice, ChunkDelta,
                                CompletionChoice, CompletionRequest,
                                CompletionResponse, Usage, encode_text)
-from repro.api.streaming import TokenEvent, TokenStream
+from repro.api.streaming import StreamSession, TokenEvent, TokenStream
 
 __all__ = [
-    "APIError", "APIStatusError", "ChatChoice", "ChatCompletionChunk",
-    "ChatCompletionRequest", "ChatCompletionResponse", "ChatMessage",
-    "ChunkChoice", "ChunkDelta", "CompletionChoice", "CompletionRequest",
-    "CompletionResponse", "ERROR_TABLE", "ErrorSpec", "PendingCompletion",
-    "ServingClient", "SUCCESS_STATUSES", "TokenEvent", "TokenStream",
-    "Usage", "encode_text", "error_for_status", "validation_error",
+    "APIError", "APIStatusError", "AdminClient", "ChatChoice",
+    "ChatCompletionChunk", "ChatCompletionRequest", "ChatCompletionResponse",
+    "ChatMessage", "ChunkChoice", "ChunkDelta", "CompletionChoice",
+    "CompletionRequest", "CompletionResponse", "DeploymentWatch",
+    "ERROR_TABLE", "ErrorSpec", "PendingCompletion", "ServingClient",
+    "StreamSession", "SUCCESS_STATUSES", "TokenEvent", "TokenStream",
+    "Usage", "WatchEvent", "encode_text", "error_for_status",
+    "validation_error",
 ]

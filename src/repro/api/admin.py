@@ -1,0 +1,131 @@
+"""`AdminClient`: the kubectl-shaped facade over the declarative control
+plane (`repro.core.deployments`).
+
+Operators (and tests, and benchmarks) manage served models exclusively
+through specs and verbs — never by poking Job Workers, Autoscalers or DB
+rows:
+
+    admin = AdminClient(control_plane)
+    dep = admin.apply(model="mistral-small-24b", replicas=1,
+                      min_replicas=1, max_replicas=6, gpus_per_node=2)
+    admin.wait(dep.name, "Ready")            # drive the virtual clock
+    admin.scale(dep.name, 3)                 # kubectl scale
+    watch = admin.watch()                    # kubectl get -w
+    watch.subscribe(lambda ev: print(ev.type, ev.name))
+    admin.delete(dep.name)
+
+Like `ServingClient` over the Web Gateway, this module is duck-typed over
+the plane (anything exposing ``.reconciler``) so `repro.api` never imports
+`repro.core`; specs are `repro.core.deployments.ModelDeploymentSpec`
+objects or their dict form (`apply(**fields)` builds the dict for you).
+
+`watch()` returns a `DeploymentWatch` — the same `StreamSession`
+subscription machinery that backs `TokenStream`, fanning typed
+`WatchEvent`s (ADDED / MODIFIED / SCALED / CONDITION / DELETED) out to any
+number of subscribers until `stop()`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.api.streaming import StreamSession
+
+
+@dataclass
+class WatchEvent:
+    """One entry of the deployment event stream (kubectl get -w line)."""
+    type: str      # ADDED | MODIFIED | SCALED | CONDITION | DELETED
+    name: str
+    t: float       # virtual-clock time
+    object: dict   # ModelDeployment.to_dict() snapshot
+
+    def to_dict(self) -> dict:
+        return {"type": self.type, "name": self.name, "t": self.t,
+                "object": self.object}
+
+
+class DeploymentWatch(StreamSession):
+    """Event-stream session over the reconciler: `subscribe(fn)` receives
+    each `WatchEvent`; `events` keeps the full history; `stop()` closes the
+    session and unsubscribes from the reconciler."""
+
+    def __init__(self):
+        super().__init__()
+        self.events: list[WatchEvent] = []
+
+    def _deliver(self, event: dict):
+        if self.closed:
+            return
+        ev = WatchEvent(type=event["type"], name=event["name"],
+                        t=event["t"], object=event["object"])
+        self.events.append(ev)
+        self._publish(ev)
+
+    def stop(self):
+        if not self.closed:
+            self._close()
+
+
+class AdminClient:
+    """Facade over the plane's `Reconciler`: specs in, deployments and
+    watch sessions out."""
+
+    def __init__(self, plane):
+        # `plane` is a ControlPlane (or anything exposing .reconciler);
+        # passing a Reconciler directly also works.
+        self.reconciler = getattr(plane, "reconciler", plane)
+        self.loop = getattr(plane, "loop", None) or self.reconciler.loop
+
+    # -- verbs -------------------------------------------------------------
+    def apply(self, spec=None, **fields):
+        """kubectl apply: create or update a deployment.  Pass a
+        `ModelDeploymentSpec`, its dict form, or field keywords."""
+        if spec is not None and fields:
+            raise TypeError(f"pass either a spec or field keywords, not "
+                            f"both (got spec and {sorted(fields)})")
+        return self.reconciler.apply(fields if spec is None else spec)
+
+    def get(self, name: str):
+        """kubectl get: the `ModelDeployment` (spec + live status), or
+        None."""
+        return self.reconciler.get(name)
+
+    def list(self) -> list:
+        return self.reconciler.list()
+
+    def status(self, name: str) -> Optional[dict]:
+        """Wire-form snapshot (`to_dict`) of one deployment."""
+        dep = self.reconciler.get(name)
+        return None if dep is None else dep.to_dict()
+
+    def scale(self, name: str, replicas: int):
+        """kubectl scale: patch spec.replicas within [min, max]."""
+        return self.reconciler.scale(name, replicas)
+
+    def delete(self, name: str) -> bool:
+        return self.reconciler.delete(name)
+
+    def watch(self) -> DeploymentWatch:
+        """kubectl get -w: live event stream until `stop()`."""
+        w = DeploymentWatch()
+        self.reconciler.watch(w._deliver)
+        w.on_done(lambda _s: self.reconciler.unwatch(w._deliver))
+        return w
+
+    # -- virtual-clock helpers ---------------------------------------------
+    def wait(self, name: str, condition: str = "Ready",
+             timeout: float = 600.0, status: bool = True) -> bool:
+        """Drive the event loop until `condition` reports `status` (the
+        blocking `kubectl wait --for=condition=...` analogue).  Returns
+        True if the condition was met within `timeout` virtual seconds."""
+        def met() -> bool:
+            dep = self.reconciler.get(name)
+            if dep is None:
+                return False
+            cond = dep.status.condition(condition)
+            return cond is not None and cond.status is status
+        if not met() and self.loop is not None:
+            self.loop.run_while(lambda: not met(),
+                                max_t=self.loop.now + timeout)
+        return met()

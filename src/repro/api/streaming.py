@@ -36,10 +36,46 @@ class TokenEvent:
     index: int
 
 
-class TokenStream:
+class StreamSession:
+    """Subscription core shared by every SSE-analogue session: fan-out to
+    any number of subscribers, one-shot done callbacks, terminal close.
+    `TokenStream` (serving) and the admin API's `DeploymentWatch`
+    (`repro.api.admin`) both ride on this."""
+
+    def __init__(self):
+        self.closed = False
+        self._subs: list[Callable] = []
+        self._done_subs: list[Callable] = []
+
+    def subscribe(self, fn: Callable) -> Callable:
+        """fn(*event args) per published event."""
+        self._subs.append(fn)
+        return fn
+
+    def on_done(self, fn: Callable) -> Callable:
+        """fn(session) once, at terminal close."""
+        if self.closed:
+            fn(self)
+        else:
+            self._done_subs.append(fn)
+        return fn
+
+    def _publish(self, *args):
+        for fn in list(self._subs):
+            fn(*args)
+
+    def _close(self):
+        self.closed = True
+        done, self._done_subs = self._done_subs, []
+        for fn in done:
+            fn(self)
+
+
+class TokenStream(StreamSession):
     """One streaming session bound to one engine request."""
 
     def __init__(self, req: Request, model: str = "", kind: str = "chat"):
+        super().__init__()
         self.req = req
         self.model = model or req.model or ""
         self.kind = kind                       # "chat" | "completion"
@@ -49,15 +85,12 @@ class TokenStream:
         self.events: list[TokenEvent] = []
         self.error: Optional[APIError] = None
         self.finish_reason: Optional[str] = None
-        self.closed = False
         self.transport_delay = 0.0             # gateway response hop
         # stamped by the gateway at dispatch: the retry hint any terminal
         # 461/462 failure of this stream should carry (queue TTL / cooldown)
         self.retry_after_hint: Optional[float] = None
         self.dispatch_epoch = 0
         self._finish_hook: Optional[Callable] = None
-        self._token_subs: list[Callable] = []
-        self._done_subs: list[Callable] = []
         req.on_token = self._emit              # single install, ever
 
     # -- attachment --------------------------------------------------------
@@ -74,21 +107,12 @@ class TokenStream:
         legacy_cb = req.on_token
         stream = cls(req, model, kind)
         if legacy_cb is not None:
-            stream._token_subs.append(legacy_cb)
+            stream._subs.append(legacy_cb)
         return stream
 
-    def subscribe(self, fn: Callable) -> Callable:
-        """fn(request, token_id, t_client) per streamed token."""
-        self._token_subs.append(fn)
-        return fn
-
-    def on_done(self, fn: Callable) -> Callable:
-        """fn(stream) once, at terminal close (finish OR error)."""
-        if self.closed:
-            fn(self)
-        else:
-            self._done_subs.append(fn)
-        return fn
+    # subscribe(fn): fn(request, token_id, t_client) per streamed token;
+    # on_done(fn): fn(stream) once at terminal close (finish OR error) —
+    # both inherited from StreamSession.
 
     # -- gateway side ------------------------------------------------------
     def bind(self, finish_hook: Optional[Callable],
@@ -137,20 +161,13 @@ class TokenStream:
         t_client = t + self.transport_delay
         self.events.append(TokenEvent(token=token, t=t_client,
                                       index=len(self.events)))
-        for fn in list(self._token_subs):
-            fn(r, token, t_client)
+        self._publish(r, token, t_client)
         reason = r.finish_reason(token)
         if reason is not None:
             self.finish_reason = reason
             if self._finish_hook is not None:
                 self._finish_hook(r)
             self._close()
-
-    def _close(self):
-        self.closed = True
-        done, self._done_subs = self._done_subs, []
-        for fn in done:
-            fn(self)
 
     # -- wire views --------------------------------------------------------
     @property

@@ -180,6 +180,9 @@ class ServiceConfig:
     (see repro.core.router.POLICIES). queue_capacity > 0 enables bounded
     router-side request queuing: requests that would be rejected 461 are
     held up to queue_ttl seconds and drained when an instance comes up.
+    Dequeue is priority-ordered (Request.priority, FIFO within a class);
+    queue_aging is the starvation-avoidance knob — priority points a
+    queued request gains per second of waiting (0 = strict priority).
     retry_after_cooldown is the Retry-After hint stamped on 461/462 wire
     errors when queuing is disabled — the autoscaler scale-up cooldown
     analogue (with queuing enabled the hint is queue_ttl instead).
@@ -190,6 +193,7 @@ class ServiceConfig:
     queue_capacity: int = 0            # 0 = disabled (seed behaviour)
     queue_ttl: float = 30.0            # seconds before a queued req expires
     queue_drain_interval: float = 1.0  # periodic expiry/drain tick
+    queue_aging: float = 0.0           # priority points per queued second
     retry_after_cooldown: float = 60.0  # 461/462 retry hint, queue disabled
 
 

@@ -6,6 +6,13 @@ is by hardware load (queue time / KVC utilisation reported by the engines),
 not request count. A symmetric scale-down rule (idle KV + empty queue
 sustained) is our beyond-paper addition — the paper plans this for
 off-hours research workloads.
+
+Actuation is indirect: the webhook lands at the Metrics Gateway, which for
+declaratively managed models forwards it as a *spec patch* — the firing
+rule adjusts `ModelDeploymentSpec.replicas`, clamped to the deployment's
+[min_replicas, max_replicas] window, and the `Reconciler`
+(repro.core.deployments) converges the cluster.  The autoscaler itself
+never submits or cancels jobs.
 """
 from __future__ import annotations
 

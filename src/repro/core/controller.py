@@ -17,6 +17,7 @@ from repro.config import (GPU_H100, HardwareConfig, ModelConfig,
                           ServiceConfig)
 from repro.core.autoscaler import Autoscaler, AlertRule
 from repro.core.db import Database
+from repro.core.deployments import Reconciler
 from repro.core.instance import VLLMInstance
 from repro.core.metrics_gateway import MetricsGateway
 from repro.core.services import (EndpointGateway, EndpointWorker, JobWorker,
@@ -41,6 +42,7 @@ class ClusterSpec:
     autoscaler_interval: float = 10.0
     startup_timeout: float = 1800.0       # paper: 30 minutes
     slurm_sched_interval: float = 2.0
+    reconcile_interval: float = 5.0       # declarative-deployment loop
     # engine shape
     num_blocks: int = 4096
     block_size: int = 32
@@ -92,15 +94,33 @@ class ControlPlane:
         # queued gateway demand feeds the scrape; fresh endpoints drain it
         self.metrics_gateway.attach_web_gateway(self.web_gateway)
         self.endpoint_worker.on_ready = self.web_gateway.notify_ready
+        # declarative layer: ModelDeployment specs reconciled on the loop;
+        # the Job Worker is its executor, the autoscaler its spec patcher
+        self.reconciler = Reconciler(
+            self.db, self.loop, self.slurm, self.job_worker, self.registry,
+            interval=self.spec.reconcile_interval, gateway=self.web_gateway,
+            default_max_model_len=self.spec.max_model_len,
+            known_models=lambda m: m in self.model_cfgs)
+        self.metrics_gateway.spec_patcher = self.reconciler.patch_replicas
 
     # ------------------------------------------------------------------
     def add_tenant(self, name: str, api_key: str):
         return self.db.create_tenant(name, api_key)
 
+    def register_model(self, cfg: ModelConfig) -> ModelConfig:
+        """Make an engine `ModelConfig` known to the plane without creating
+        any desired state — the declarative path: `register_model` then
+        `AdminClient.apply(ModelDeploymentSpec(...))`."""
+        self.model_cfgs[cfg.name] = cfg
+        return cfg
+
     def add_model(self, cfg: ModelConfig, *, instances: int = 1,
                   gpus_per_node: int = 1, nodes: int = 1,
                   est_load_time: float = 120.0, version: str = "1",
                   max_model_len: Optional[int] = None) -> dict:
+        """Legacy imperative path: insert the configuration row directly
+        (the Job Worker's count-diffing loop converges it).  New callers
+        should prefer `register_model` + a ModelDeploymentSpec."""
         self.model_cfgs[cfg.name] = cfg
         return self.db["ai_model_configurations"].insert(
             self.db, model_name=cfg.name, model_version=version,

@@ -1,0 +1,589 @@
+"""Declarative control-plane API: ModelDeployment specs, status conditions
+and the reconciler loop (Kubernetes-operator style, beyond-paper).
+
+The paper's management components are imperative: the Job Worker counts
+rows, the Grafana webhook mutates ``ai_model_configurations.instances``
+directly, and there is no object an operator can apply, diff or watch.
+This module adds the declarative surface Chat AI (arXiv 2407.00110) and
+the production-stack router get from Kubernetes CRDs:
+
+* `ModelDeploymentSpec`  — desired state: model + replica window
+  (``min_replicas``/``max_replicas``/``replicas``), per-deployment routing
+  policy and gateway-queue knobs, Slurm priority class and
+  hardware/partition requirements.  Strictly validated, ``to_dict`` /
+  ``from_dict`` round-trips (the wire contract, `repro.api.schemas` style).
+* `DeploymentStatus`     — observed state: ready/starting/pending/draining
+  replica counts, a typed `Condition` list (Available / Ready /
+  Progressing) and ``observed_generation`` which lags ``generation`` until
+  the reconciler has fully converged.
+* `Reconciler`           — the control loop: each tick it observes the
+  endpoint-job rows + Slurm states, executes at most one submission
+  (the paper's Job-Worker pacing) plus any drains/cancels, and updates
+  status.  Scale-down *drains* ready replicas (stop routing, let in-flight
+  requests finish, then ``scancel``); template changes (model version /
+  hardware shape) roll: surge one fresh replica, retire one stale replica
+  at a time, never letting ready replicas fall below ``min_replicas``.
+  Node failure is not a special case — observed replicas drop below spec
+  and the same loop restores them.
+
+The Autoscaler actuates through `patch_replicas`: alert webhooks become
+replica-count *patches on the spec*, clamped to the deployment's
+min/max window, instead of raw DB writes (see
+`MetricsGateway.grafana_webhook`).  Everything here is driven by
+`repro.api.admin.AdminClient`, the kubectl-shaped facade.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from repro.api.errors import APIStatusError, validation_error
+from repro.core.db import Database
+from repro.core.router import POLICIES, endpoint_key
+from repro.core.simclock import EventLoop
+from repro.core.slurm import JobState, SimSlurm
+
+# condition types (k8s Deployment-style)
+COND_AVAILABLE = "Available"      # ready replicas >= min_replicas
+COND_READY = "Ready"              # fully converged with the current spec
+COND_PROGRESSING = "Progressing"  # reconciler still has work to do
+
+
+def _fail(param: str, message: str):
+    raise APIStatusError(validation_error(param, message))
+
+
+def _check_int(v, param: str, minimum: Optional[int] = None):
+    if type(v) is not int:
+        _fail(param, f"{param} {v!r} must be an int")
+    if minimum is not None and v < minimum:
+        _fail(param, f"{param} {v!r} must be >= {minimum}")
+
+
+def _check_number(v, param: str, minimum: float = 0.0):
+    if not isinstance(v, (int, float)) or isinstance(v, bool) or v < minimum:
+        _fail(param, f"{param} {v!r} must be a number >= {minimum}")
+
+
+@dataclass
+class ModelDeploymentSpec:
+    """Desired state of one served model — the single source of truth the
+    reconciler converges the cluster toward."""
+    model: str
+    model_version: str = "1"
+    # replica window: `replicas` is the current target (patched by the
+    # autoscaler), clamped to [min_replicas, max_replicas]
+    replicas: int = 1
+    min_replicas: int = 1
+    max_replicas: int = 8
+    # per-deployment gateway behaviour (None = inherit the gateway default)
+    routing_policy: Optional[str] = None
+    queue_capacity: Optional[int] = None
+    queue_ttl: Optional[float] = None
+    # Slurm scheduling priority for this deployment's jobs (higher first)
+    priority_class: int = 0
+    # hardware / partition requirements (the job template)
+    gpus_per_node: int = 1
+    nodes: int = 1
+    partition: str = "gpu"
+    est_load_time: float = 120.0
+    max_model_len: Optional[int] = None
+    # seconds a draining replica may keep serving in-flight requests
+    # before it is force-cancelled
+    drain_grace: float = 120.0
+
+    def validate(self):
+        """Strict field-addressed validation — violations raise a 422
+        `APIStatusError` whose ``param`` names the field (same contract as
+        the serving schemas)."""
+        if not isinstance(self.model, str) or not self.model:
+            _fail("model", "model must be a non-empty string")
+        if not isinstance(self.model_version, str) or not self.model_version:
+            _fail("model_version", "model_version must be a non-empty string")
+        _check_int(self.min_replicas, "min_replicas", minimum=0)
+        _check_int(self.max_replicas, "max_replicas", minimum=1)
+        if self.max_replicas < self.min_replicas:
+            _fail("max_replicas",
+                  f"max_replicas {self.max_replicas} must be >= "
+                  f"min_replicas {self.min_replicas}")
+        _check_int(self.replicas, "replicas", minimum=0)
+        if not (self.min_replicas <= self.replicas <= self.max_replicas):
+            _fail("replicas",
+                  f"replicas {self.replicas} must lie in "
+                  f"[{self.min_replicas}, {self.max_replicas}]")
+        if self.routing_policy is not None \
+                and self.routing_policy not in POLICIES:
+            _fail("routing_policy",
+                  f"routing_policy {self.routing_policy!r} must be one of "
+                  f"{sorted(POLICIES)} (or null)")
+        if self.queue_capacity is not None:
+            _check_int(self.queue_capacity, "queue_capacity", minimum=0)
+        if self.queue_ttl is not None:
+            _check_number(self.queue_ttl, "queue_ttl", minimum=1e-9)
+        _check_int(self.priority_class, "priority_class")
+        _check_int(self.gpus_per_node, "gpus_per_node", minimum=1)
+        _check_int(self.nodes, "nodes", minimum=1)
+        if not isinstance(self.partition, str) or not self.partition:
+            _fail("partition", "partition must be a non-empty string")
+        _check_number(self.est_load_time, "est_load_time")
+        if self.max_model_len is not None:
+            _check_int(self.max_model_len, "max_model_len", minimum=1)
+        _check_number(self.drain_grace, "drain_grace")
+
+    def template(self) -> tuple:
+        """The replica template: fields whose change requires replacing
+        running replicas (rolling update) rather than patching in place."""
+        return (self.model_version, self.gpus_per_node, self.nodes,
+                self.partition, self.est_load_time, self.max_model_len)
+
+    def to_dict(self) -> dict:
+        return {"model": self.model, "model_version": self.model_version,
+                "replicas": self.replicas,
+                "min_replicas": self.min_replicas,
+                "max_replicas": self.max_replicas,
+                "routing_policy": self.routing_policy,
+                "queue_capacity": self.queue_capacity,
+                "queue_ttl": self.queue_ttl,
+                "priority_class": self.priority_class,
+                "gpus_per_node": self.gpus_per_node, "nodes": self.nodes,
+                "partition": self.partition,
+                "est_load_time": self.est_load_time,
+                "max_model_len": self.max_model_len,
+                "drain_grace": self.drain_grace}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ModelDeploymentSpec":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(d) - known)
+        if unknown:
+            _fail(unknown[0],
+                  f"unknown field(s) {unknown} in ModelDeploymentSpec "
+                  f"manifest")
+        return cls(**d)
+
+
+@dataclass
+class Condition:
+    """One typed observation about the deployment, k8s-condition shaped."""
+    type: str
+    status: bool
+    reason: str = ""
+    message: str = ""
+    last_transition_time: float = 0.0
+
+    def to_dict(self) -> dict:
+        return {"type": self.type, "status": self.status,
+                "reason": self.reason, "message": self.message,
+                "last_transition_time": self.last_transition_time}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Condition":
+        return cls(type=d["type"], status=d["status"],
+                   reason=d.get("reason", ""), message=d.get("message", ""),
+                   last_transition_time=d.get("last_transition_time", 0.0))
+
+
+@dataclass
+class DeploymentStatus:
+    """Observed state, refreshed on every reconcile tick."""
+    replicas: int = 0             # live jobs (incl. draining)
+    ready_replicas: int = 0       # serving traffic (excl. draining)
+    starting_replicas: int = 0    # Slurm RUNNING, weights still loading
+    pending_replicas: int = 0     # Slurm PENDING (no node yet)
+    draining_replicas: int = 0    # finishing in-flight work before scancel
+    observed_generation: int = 0  # == generation only once converged
+    conditions: list = field(default_factory=list)   # list[Condition]
+
+    def condition(self, ctype: str) -> Optional[Condition]:
+        for c in self.conditions:
+            if c.type == ctype:
+                return c
+        return None
+
+    def set_condition(self, ctype: str, status: bool, reason: str,
+                      message: str, now: float) -> bool:
+        """Upsert; returns True when the condition *status* flipped (the
+        k8s transition semantics — reason/message refresh silently)."""
+        cond = self.condition(ctype)
+        if cond is None:
+            self.conditions.append(Condition(
+                type=ctype, status=status, reason=reason, message=message,
+                last_transition_time=now))
+            return True
+        flipped = cond.status != status
+        if flipped:
+            cond.last_transition_time = now
+        cond.status = status
+        cond.reason = reason
+        cond.message = message
+        return flipped
+
+    def to_dict(self) -> dict:
+        return {"replicas": self.replicas,
+                "ready_replicas": self.ready_replicas,
+                "starting_replicas": self.starting_replicas,
+                "pending_replicas": self.pending_replicas,
+                "draining_replicas": self.draining_replicas,
+                "observed_generation": self.observed_generation,
+                "conditions": [c.to_dict() for c in self.conditions]}
+
+
+@dataclass
+class ModelDeployment:
+    """spec + status + bookkeeping for one declaratively managed model."""
+    name: str
+    spec: ModelDeploymentSpec
+    status: DeploymentStatus = field(default_factory=DeploymentStatus)
+    generation: int = 1            # bumped on every spec change
+    template_generation: int = 1   # bumped when spec.template() changes
+    config_id: Optional[int] = None   # backing ai_model_configurations row
+    # (t, condition type, new status, reason) — every condition flip, so
+    # benchmarks can report e.g. the Ready False->True recovery transition
+    transitions: list = field(default_factory=list)
+    # endpoint-job row id -> template_generation it was submitted under
+    _job_template: dict = field(default_factory=dict)
+    # endpoint-job row id -> drain deadline (force-scancel time)
+    _draining: dict = field(default_factory=dict)
+
+    @property
+    def desired_replicas(self) -> int:
+        s = self.spec
+        return max(s.min_replicas, min(s.max_replicas, s.replicas))
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "generation": self.generation,
+                "template_generation": self.template_generation,
+                "spec": self.spec.to_dict(),
+                "status": self.status.to_dict()}
+
+
+class Reconciler:
+    """The declarative control loop: `deployments` holds desired state,
+    every tick observes the cluster and converges it.  The Job Worker acts
+    purely as the reconcile *executor* (`submit_one`) for managed configs;
+    its own legacy loop skips them (see `JobWorker.managed`)."""
+
+    def __init__(self, db: Database, loop: EventLoop, slurm: SimSlurm,
+                 job_worker, registry: dict, interval: float = 5.0,
+                 gateway=None, default_max_model_len: int = 8192,
+                 known_models: Optional[Callable[[str], bool]] = None):
+        self.db = db
+        self.loop = loop
+        self.slurm = slurm
+        self.job_worker = job_worker
+        self.registry = registry              # (node, port) -> VLLMInstance
+        self.gateway = gateway                # WebGateway (policy/queue wiring)
+        self.default_max_model_len = default_max_model_len
+        self.known_models = known_models
+        self.deployments: dict[str, ModelDeployment] = {}
+        self._by_config: dict[int, ModelDeployment] = {}
+        self._watchers: list[Callable[[dict], None]] = []
+        loop.every(interval, self.reconcile)
+
+    # ------------------------------------------------------------------
+    # kubectl-shaped verbs (wrapped by repro.api.admin.AdminClient)
+    # ------------------------------------------------------------------
+    def apply(self, spec) -> ModelDeployment:
+        """Create or update the deployment named by ``spec.model``.
+        Accepts a `ModelDeploymentSpec` or its dict form.  An apply that
+        changes nothing is a no-op (generation unchanged)."""
+        if isinstance(spec, dict):
+            spec = ModelDeploymentSpec.from_dict(spec)
+        spec.validate()
+        if self.known_models is not None and not self.known_models(spec.model):
+            _fail("model", f"model {spec.model!r} has no registered "
+                           f"ModelConfig (ControlPlane.register_model)")
+        dep = self.deployments.get(spec.model)
+        if dep is None:
+            row = self.db["ai_model_configurations"].insert(
+                self.db, model_name=spec.model,
+                model_version=spec.model_version,
+                instances=spec.replicas, gpus_per_node=spec.gpus_per_node,
+                nodes=spec.nodes, est_load_time=spec.est_load_time,
+                max_model_len=spec.max_model_len or self.default_max_model_len,
+                slurm_partition=spec.partition)
+            dep = ModelDeployment(name=spec.model, spec=spec,
+                                  config_id=row["id"])
+            self.deployments[spec.model] = dep
+            self._by_config[row["id"]] = dep
+            self.job_worker.managed.add(row["id"])
+            self._wire_gateway(dep)
+            self._emit("ADDED", dep)
+            self._update_status(dep, dep.desired_replicas, self.loop.now)
+            return dep
+        if spec == dep.spec:
+            return dep
+        template_changed = spec.template() != dep.spec.template()
+        dep.spec = spec
+        dep.generation += 1
+        if template_changed:
+            dep.template_generation += 1
+            self.db["ai_model_configurations"].update(
+                dep.config_id, model_version=spec.model_version,
+                gpus_per_node=spec.gpus_per_node, nodes=spec.nodes,
+                est_load_time=spec.est_load_time,
+                max_model_len=spec.max_model_len or self.default_max_model_len,
+                slurm_partition=spec.partition)
+        self._wire_gateway(dep)
+        self._emit("MODIFIED", dep)
+        # refresh conditions NOW: a spec the cluster no longer satisfies
+        # must flip Ready before the next tick (AdminClient.wait relies on
+        # conditions never being stale across a verb)
+        self._update_status(dep, dep.desired_replicas, self.loop.now)
+        return dep
+
+    def get(self, name: str) -> Optional[ModelDeployment]:
+        return self.deployments.get(name)
+
+    def list(self) -> list:
+        return list(self.deployments.values())
+
+    def scale(self, name: str, replicas: int) -> ModelDeployment:
+        """kubectl scale: patch only spec.replicas (within [min, max])."""
+        dep = self.deployments.get(name)
+        if dep is None:
+            _fail("name", f"no deployment named {name!r}")
+        _check_int(replicas, "replicas", minimum=0)
+        if not (dep.spec.min_replicas <= replicas <= dep.spec.max_replicas):
+            _fail("replicas",
+                  f"replicas {replicas} must lie in "
+                  f"[{dep.spec.min_replicas}, {dep.spec.max_replicas}]")
+        if replicas != dep.spec.replicas:
+            dep.spec.replicas = replicas
+            dep.generation += 1
+            self._emit("SCALED", dep)
+            self._update_status(dep, dep.desired_replicas, self.loop.now)
+        return dep
+
+    def delete(self, name: str) -> bool:
+        """Tear the deployment down: scancel every live job (in-flight
+        requests fail 462 — delete is not a drain) and cascade-delete the
+        backing rows."""
+        dep = self.deployments.pop(name, None)
+        if dep is None:
+            return False
+        for job in self._jobs(dep):
+            if job["slurm_job_id"] is not None:
+                self.slurm.scancel(job["slurm_job_id"])
+        self._by_config.pop(dep.config_id, None)
+        self.job_worker.managed.discard(dep.config_id)
+        if self.db["ai_model_configurations"].get(dep.config_id) is not None:
+            self.db["ai_model_configurations"].delete(self.db, dep.config_id)
+        if self.gateway is not None:
+            self.gateway.set_model_policy(name, None)
+            self.gateway.set_model_queue(name, None, None)
+        self._emit("DELETED", dep)
+        return True
+
+    def patch_replicas(self, config_id: int, delta: int,
+                       rule: str = "") -> Optional[tuple]:
+        """Autoscaler actuation: patch spec.replicas by ``delta``, clamped
+        to the deployment's [min_replicas, max_replicas] window.  Returns
+        (old, new) for a managed config — possibly equal when clamped —
+        or None when the config is not declaratively managed (the webhook
+        then falls back to the legacy DB mutation)."""
+        dep = self._by_config.get(config_id)
+        if dep is None:
+            return None
+        old = dep.spec.replicas
+        new = max(dep.spec.min_replicas,
+                  min(dep.spec.max_replicas, old + delta))
+        if new != old:
+            dep.spec.replicas = new
+            dep.generation += 1
+            self._emit("SCALED", dep, extra={"rule": rule, "delta": delta})
+            self._update_status(dep, dep.desired_replicas, self.loop.now)
+        return old, new
+
+    # ------------------------------------------------------------------
+    # watch plumbing (event dicts; AdminClient wraps them in WatchEvent)
+    # ------------------------------------------------------------------
+    def watch(self, fn: Callable[[dict], None]) -> Callable:
+        self._watchers.append(fn)
+        return fn
+
+    def unwatch(self, fn: Callable[[dict], None]):
+        if fn in self._watchers:
+            self._watchers.remove(fn)
+
+    def _emit(self, etype: str, dep: ModelDeployment,
+              extra: Optional[dict] = None):
+        event = {"type": etype, "name": dep.name, "t": self.loop.now,
+                 "object": dep.to_dict()}
+        if extra:
+            event.update(extra)
+        for fn in list(self._watchers):
+            fn(event)
+
+    # ------------------------------------------------------------------
+    # the control loop
+    # ------------------------------------------------------------------
+    def reconcile(self, now: Optional[float] = None):
+        now = self.loop.now if now is None else now
+        for dep in list(self.deployments.values()):
+            self._reconcile_one(dep, now)
+
+    def _jobs(self, dep: ModelDeployment) -> list:
+        jobs = self.db["ai_model_endpoint_jobs"].select(
+            configuration_id=dep.config_id)
+        return [j for j in jobs
+                if self.slurm.job_state(j["slurm_job_id"])
+                in (JobState.PENDING, JobState.RUNNING)]
+
+    def _instance_for(self, job: dict):
+        eps = self.db["ai_model_endpoints"].select(endpoint_job_id=job["id"])
+        if not eps:
+            return None
+        return self.registry.get(endpoint_key(eps[0]))
+
+    def _wire_gateway(self, dep: ModelDeployment):
+        """Push per-deployment routing/queue policy into the Web Gateway."""
+        if self.gateway is None:
+            return
+        self.gateway.set_model_policy(dep.name, dep.spec.routing_policy)
+        self.gateway.set_model_queue(dep.name, dep.spec.queue_capacity,
+                                     dep.spec.queue_ttl)
+
+    def _start_drain(self, dep: ModelDeployment, job: dict, now: float):
+        dep._draining[job["id"]] = now + dep.spec.drain_grace
+        inst = self._instance_for(job)
+        if inst is not None:
+            inst.drain()
+
+    def _reconcile_one(self, dep: ModelDeployment, now: float):
+        cfg = self.db["ai_model_configurations"].get(dep.config_id)
+        if cfg is None:        # deleted out from under us
+            return
+        desired = dep.desired_replicas
+        # keep the legacy desired-state column in sync: the spec is the
+        # source of truth, the DB row is the executor's actuation record
+        if cfg["instances"] != desired:
+            self.db["ai_model_configurations"].update(
+                cfg["id"], instances=desired)
+
+        live = self._jobs(dep)
+        known = {j["id"] for j in live}
+        dep._job_template = {k: v for k, v in dep._job_template.items()
+                             if k in known}
+        dep._draining = {k: v for k, v in dep._draining.items()
+                         if k in known}
+
+        # 1. finish drains: scancel once idle (or past the grace deadline)
+        for job in [j for j in live if j["id"] in dep._draining]:
+            inst = self._instance_for(job)
+            idle = inst is None or not inst.engine.has_work()
+            if idle or now >= dep._draining[job["id"]]:
+                self.slurm.scancel(job["slurm_job_id"])
+                dep._draining.pop(job["id"], None)
+
+        live = self._jobs(dep)     # re-read after cancels
+        active = [j for j in live if j["id"] not in dep._draining]
+        stale = [j for j in active
+                 if dep._job_template.get(j["id"], 0)
+                 < dep.template_generation]
+        fresh = [j for j in active if j not in stale]
+
+        # 2. scale up / rolling surge — one submission per tick, the
+        # paper's Job-Worker pacing (avoids port races)
+        surge = 1 if stale else 0
+        if len(fresh) < desired and len(active) < desired + surge:
+            row = self.job_worker.submit_one(
+                cfg, now, priority=dep.spec.priority_class)
+            dep._job_template[row["id"]] = dep.template_generation
+        elif stale:
+            # 3. rolling update: stale replicas that never became ready are
+            # not serving — cancel outright; retire at most one ready stale
+            # replica per tick, and only while a fresh replica is ready and
+            # the ready count stays >= min_replicas
+            for job in [j for j in stale if j["ready_at"] is None]:
+                self.slurm.scancel(job["slurm_job_id"])
+            ready_stale = sorted((j for j in stale
+                                  if j["ready_at"] is not None),
+                                 key=lambda j: j["submitted_at"] or 0)
+            ready_fresh = [j for j in fresh if j["ready_at"] is not None]
+            floor = min(dep.spec.min_replicas, desired)
+            if ready_stale and ready_fresh \
+                    and len(ready_stale) + len(ready_fresh) - 1 >= floor:
+                self._start_drain(dep, ready_stale[0], now)
+        elif len(active) > desired:
+            # 4. scale down: not-yet-ready victims first (nothing to
+            # drain), then the newest ready replicas — which DRAIN instead
+            # of being scancel'd with requests in flight
+            excess = len(active) - desired
+            victims = sorted(active,
+                             key=lambda j: (j["ready_at"] is not None,
+                                            -(j["submitted_at"] or 0)))
+            for job in victims[:excess]:
+                if job["ready_at"] is None:
+                    self.slurm.scancel(job["slurm_job_id"])
+                else:
+                    self._start_drain(dep, job, now)
+
+        self._update_status(dep, desired, now)
+
+    # ------------------------------------------------------------------
+    def _update_status(self, dep: ModelDeployment, desired: int, now: float):
+        live = self._jobs(dep)
+        draining = [j for j in live if j["id"] in dep._draining]
+        active = [j for j in live if j["id"] not in dep._draining]
+        stale = [j for j in active
+                 if dep._job_template.get(j["id"], 0)
+                 < dep.template_generation]
+        st = dep.status
+        st.replicas = len(live)
+        st.ready_replicas = sum(1 for j in active
+                                if j["ready_at"] is not None)
+        st.pending_replicas = sum(
+            1 for j in active
+            if self.slurm.job_state(j["slurm_job_id"]) == JobState.PENDING)
+        st.starting_replicas = (len(active) - st.ready_replicas
+                                - st.pending_replicas)
+        st.draining_replicas = len(draining)
+
+        converged = (len(active) == desired
+                     and st.ready_replicas == desired
+                     and not stale and not draining)
+        rolling = bool(stale) or any(
+            dep._job_template.get(j["id"], 0) < dep.template_generation
+            for j in draining)
+        if converged:
+            reason = "AllReplicasReady"
+        elif rolling:
+            reason = "RollingUpdate"
+        elif len(active) > desired or draining:
+            reason = "ScalingDown"
+        elif dep.generation != st.observed_generation:
+            # converging toward a spec we have not met yet
+            reason = "ScalingUp"
+        else:
+            # the observed generation WAS converged and replicas fell
+            # underneath us (node failure, job death): the replacement may
+            # already be submitted, the reason records why we regressed
+            reason = "ReplicaFailure"
+
+        msg = (f"{st.ready_replicas}/{desired} ready "
+               f"({st.starting_replicas} starting, "
+               f"{st.pending_replicas} pending, "
+               f"{st.draining_replicas} draining)")
+        flips = []
+        if st.set_condition(COND_AVAILABLE,
+                            st.ready_replicas >= min(dep.spec.min_replicas,
+                                                     desired),
+                            "MinimumReplicasAvailable"
+                            if st.ready_replicas >= min(dep.spec.min_replicas,
+                                                        desired)
+                            else "MinimumReplicasUnavailable", msg, now):
+            flips.append(COND_AVAILABLE)
+        if st.set_condition(COND_READY, converged, reason, msg, now):
+            flips.append(COND_READY)
+        if st.set_condition(COND_PROGRESSING, not converged, reason, msg,
+                            now):
+            flips.append(COND_PROGRESSING)
+        if converged:
+            st.observed_generation = dep.generation
+        for ctype in flips:
+            cond = st.condition(ctype)
+            dep.transitions.append((now, ctype, cond.status, cond.reason))
+        if flips:
+            self._emit("CONDITION", dep)

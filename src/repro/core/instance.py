@@ -27,6 +27,10 @@ class VLLMInstance:
         self.model_name = model_name
         self.alive = True
         self.loaded = False
+        # draining: still alive and serving in-flight work, but the Web
+        # Gateway must not route NEW requests here (declarative scale-down
+        # / rolling update); the Reconciler scancels once the engine idles
+        self.draining = False
         self._stepping = False
         loop.call_after(load_time, self._finish_load)
 
@@ -35,6 +39,12 @@ class VLLMInstance:
         if self.alive:
             self.loaded = True
             self._kick()
+
+    def drain(self):
+        """Stop accepting new routed traffic; keep stepping until the
+        engine runs dry.  `health()` stays 200 so the Endpoint Worker does
+        not reap the rows mid-drain."""
+        self.draining = True
 
     def kill(self):
         """Slurm job cancelled / node failed: in-flight requests are lost."""

@@ -33,6 +33,10 @@ class MetricsGateway:
         self.endpoint_metrics: dict[tuple, dict] = {}
         self.scale_events: list[tuple] = []   # (t, config_id, delta, reason)
         self.web_gateway = None               # set via attach_web_gateway
+        # Reconciler.patch_replicas, set by the ControlPlane: for configs
+        # managed declaratively the webhook patches the deployment SPEC
+        # (clamped to its min/max window) instead of mutating the DB row
+        self.spec_patcher = None
         loop.every(scrape_interval, self.scrape)
 
     def attach_web_gateway(self, gw):
@@ -133,10 +137,28 @@ class MetricsGateway:
     # -- Grafana contact-point webhook --------------------------------------
     def grafana_webhook(self, payload: dict) -> int:
         """POST with a custom JSON payload from a firing alert rule.
-        {"config_id": int, "delta": +1|-1, "rule": str}"""
+        {"config_id": int, "delta": +1|-1, "rule": str}
+
+        Declaratively managed configs (`spec_patcher` returns non-None):
+        the alert becomes a replica-count patch on the ModelDeploymentSpec,
+        clamped to the deployment's own [min_replicas, max_replicas] — the
+        Reconciler then converges the cluster.  Unmanaged configs keep the
+        paper's direct ``instances`` mutation, clamped to the gateway-wide
+        min/max."""
         cfg = self.db["ai_model_configurations"].get(payload["config_id"])
         if cfg is None:
             return 404
+        if self.spec_patcher is not None:
+            patched = self.spec_patcher(payload["config_id"],
+                                        payload["delta"],
+                                        payload.get("rule", ""))
+            if patched is not None:
+                old, new = patched
+                if new != old:
+                    self.scale_events.append((self.loop.now, cfg["id"],
+                                              payload["delta"],
+                                              payload.get("rule", "")))
+                return 200
         new = max(self.min_instances,
                   min(self.max_instances, cfg["instances"] + payload["delta"]))
         if new != cfg["instances"]:

@@ -307,19 +307,35 @@ class QueuedRequest:
 
 
 class GatewayQueue:
-    """Bounded FIFO per-model holding area for requests that would
-    otherwise be rejected 461 (model configured, no ready endpoint).
+    """Bounded per-model holding area for requests that would otherwise be
+    rejected 461 (model configured, no ready endpoint).
 
     capacity == 0 disables queuing (seed behaviour). Entries past their TTL
     are expired on every drain pass; `depth(model)` and `head_age(model)`
     feed the Metrics-Gateway scrape so the autoscaler sees queued demand
     even while a model has zero live instances.
+
+    Dequeue acts on `Request.priority`: the entry with the highest
+    *effective* priority — ``priority + aging * wait_time`` — is dispatched
+    first, FIFO within a priority class.  ``aging`` (priority points per
+    queued second, `ServiceConfig.queue_aging`) is the starvation-avoidance
+    knob: with aging > 0 a long-waiting low-priority request eventually
+    outranks fresh high-priority arrivals; at the default 0.0 ordering is
+    strict priority, and with all-zero priorities it reduces to plain FIFO.
+
+    `configure_model` installs per-deployment capacity/TTL overrides (the
+    `ModelDeploymentSpec.queue_capacity` / `queue_ttl` knobs): an override
+    bounds that model's own depth instead of the shared gateway total.
     """
 
-    def __init__(self, capacity: int = 0, ttl: float = 30.0):
+    def __init__(self, capacity: int = 0, ttl: float = 30.0,
+                 aging: float = 0.0):
         self.capacity = capacity
         self.ttl = ttl
+        self.aging = aging
         self._q: dict[str, deque[QueuedRequest]] = {}
+        # model -> (capacity override, ttl override); None = inherit
+        self._model_limits: dict[str, tuple] = {}
         self.enqueued = 0
         self.drained = 0
         self.expired = 0
@@ -327,7 +343,23 @@ class GatewayQueue:
 
     @property
     def enabled(self) -> bool:
-        return self.capacity > 0
+        return self.capacity > 0 or any(
+            cap is not None and cap > 0
+            for cap, _ in self._model_limits.values())
+
+    def configure_model(self, model_name: str, capacity=None, ttl=None):
+        """Per-deployment queue knobs; (None, None) clears the override."""
+        if capacity is None and ttl is None:
+            self._model_limits.pop(model_name, None)
+        else:
+            self._model_limits[model_name] = (capacity, ttl)
+
+    def limits_for(self, model_name: str) -> tuple:
+        """(effective capacity, effective TTL) governing this model —
+        the override where set, the gateway-wide knobs otherwise."""
+        cap, ttl = self._model_limits.get(model_name, (None, None))
+        return (self.capacity if cap is None else cap,
+                self.ttl if ttl is None else ttl)
 
     def total_depth(self) -> int:
         return sum(len(q) for q in self._q.values())
@@ -345,14 +377,21 @@ class GatewayQueue:
     def offer(self, req: Request, model_name: str, now: float,
               dispatch: Callable[[Request], int]) -> bool:
         """Try to enqueue; False means the queue is disabled or full."""
-        if not self.enabled:
+        cap, ttl = self._model_limits.get(model_name, (None, None))
+        eff_cap = self.capacity if cap is None else cap
+        eff_ttl = self.ttl if ttl is None else ttl
+        if eff_cap <= 0:
             return False
-        if self.total_depth() >= self.capacity:
+        if cap is not None:
+            full = self.depth(model_name) >= cap
+        else:
+            full = self.total_depth() >= self.capacity
+        if full:
             self.rejected_full += 1
             return False
         self._q.setdefault(model_name, deque()).append(QueuedRequest(
             req=req, model_name=model_name, enqueued_at=now,
-            deadline=now + self.ttl, dispatch=dispatch))
+            deadline=now + eff_ttl, dispatch=dispatch))
         self.enqueued += 1
         return True
 
@@ -365,6 +404,17 @@ class GatewayQueue:
         self.expired += len(out)
         return out
 
+    def _select(self, q: deque, now: float) -> int:
+        """Index of the next entry to dispatch: highest effective priority
+        (priority + aging * wait), FIFO tie-break — entries sit in arrival
+        order and the strict `>` keeps the earliest among equals."""
+        best_i, best_key = 0, None
+        for i, item in enumerate(q):
+            key = item.req.priority + self.aging * (now - item.enqueued_at)
+            if best_key is None or key > best_key:
+                best_i, best_key = i, key
+        return best_i
+
     def drain(self, model_name: str, now: float,
               can_dispatch: Callable[[str], bool]) -> int:
         """Re-dispatch queued requests for `model_name` while an endpoint
@@ -372,13 +422,15 @@ class GatewayQueue:
         q = self._q.get(model_name)
         n = 0
         while q and can_dispatch(model_name):
-            item = q.popleft()
+            i = self._select(q, now)
+            item = q[i]
+            del q[i]
             item.attempts += 1
             status = item.dispatch(item.req)
             if status != 200:
                 # endpoint vanished between the check and the dispatch:
-                # put it back (front) and stop this pass
-                q.appendleft(item)
+                # put it back where it was and stop this pass
+                q.insert(i, item)
                 break
             n += 1
         self.drained += n

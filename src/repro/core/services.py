@@ -32,12 +32,16 @@ class SlurmSubmit:
 
     def submit(self, param_string: str) -> int:
         params = dict(kv.split("=", 1) for kv in param_string.split(","))
-        # "#SBATCH" directives derived from the model's .slurm template
+        # "#SBATCH" directives derived from the model's .slurm template.
+        # Coerce AFTER the spread: every value in the comma-delimited
+        # parameter string is a raw string, and spreading it last used to
+        # overwrite the int-coerced keys with those strings.
         sbatch_params = {
+            **params,
             "gpus": int(params.get("gpus", 1)),
             "nodes": int(params.get("nodes", 1)),
             "partition": params.get("partition", "gpu"),
-            **params,
+            "priority": int(params.get("priority", 0)),
         }
 
         def on_start(job, node):
@@ -81,30 +85,41 @@ class JobWorker:
     """Reconciliation loop: ai_model_configurations (desired) vs
     ai_model_endpoint_jobs (actual). Configurations are iterated
     synchronously; at most one submission per configuration per cycle (the
-    paper waits a timespan after each submit to avoid port races)."""
+    paper waits a timespan after each submit to avoid port races).
+
+    Configurations owned by the declarative `Reconciler`
+    (repro.core.deployments) are listed in `managed`: for those this class
+    is only the reconcile *executor* — the Reconciler drives `submit_one`
+    itself with drain-aware scale-down and rolling updates — and the legacy
+    count-diffing loop below skips them."""
 
     def __init__(self, db: Database, loop: EventLoop, slurm: SimSlurm,
                  submit: SlurmSubmit, interval: float = 15.0):
         self.db = db
         self.slurm = slurm
         self.submit = submit
+        self.managed: set[int] = set()   # config ids owned by the Reconciler
         self._tok = itertools.count(1)
         loop.every(interval, self.run)
         self.loop = loop
 
     def run(self, now: float):
         for cfg in list(self.db["ai_model_configurations"].rows.values()):
+            if cfg["id"] in self.managed:
+                continue
             jobs = self.db["ai_model_endpoint_jobs"].select(
                 configuration_id=cfg["id"])
             live = [j for j in jobs if self.slurm.job_state(j["slurm_job_id"])
                     in (JobState.PENDING, JobState.RUNNING)]
             desired = int(cfg["instances"])
             if len(live) < desired:
-                self._submit_one(cfg, now)      # one per cycle (sync iter)
+                self.submit_one(cfg, now)       # one per cycle (sync iter)
             elif len(live) > desired:
                 self._scale_down(cfg, live, len(live) - desired)
 
-    def _submit_one(self, cfg: dict, now: float):
+    def submit_one(self, cfg: dict, now: float, priority: int = 0) -> dict:
+        """Submit one endpoint job for `cfg`; returns the job row (the
+        Reconciler records the template generation against its id)."""
         bearer = f"tok-{next(self._tok):08x}"
         # row is created first so the job script can reference its id
         row = self.db["ai_model_endpoint_jobs"].insert(
@@ -119,10 +134,11 @@ class JobWorker:
             f"nodes={cfg['nodes']}",
             f"partition={cfg['slurm_partition']}",
             f"load={cfg['est_load_time']}",
+            f"priority={priority}",
             f"bearer={bearer}",
         ])
         slurm_job_id = self.submit.submit(param_string)
-        self.db["ai_model_endpoint_jobs"].update(
+        return self.db["ai_model_endpoint_jobs"].update(
             row["id"], slurm_job_id=slurm_job_id)
 
     def _scale_down(self, cfg: dict, live: list, excess: int):

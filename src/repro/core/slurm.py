@@ -53,6 +53,10 @@ class SlurmJob:
     def gpus(self) -> int:
         return int(self.params.get("gpus", 1))
 
+    @property
+    def priority(self) -> int:
+        return int(self.params.get("priority", 0))
+
 
 class SimSlurm:
     def __init__(self, loop: EventLoop, nodes: list[SimNode],
@@ -91,9 +95,12 @@ class SimSlurm:
 
     # ------------------------------------------------------------------
     def _schedule_cycle(self, now: float = 0.0):
+        # higher sbatch --priority first, then FIFO (all-equal priorities
+        # reduce to the paper's plain FIFO order)
         pending = sorted((j for j in self.jobs.values()
                           if j.state == JobState.PENDING),
-                         key=lambda j: (j.submitted_at, j.job_id))
+                         key=lambda j: (-j.priority, j.submitted_at,
+                                        j.job_id))
         for job in pending:
             part = job.params.get("partition", "gpu")
             node = next((n for n in self.nodes.values()

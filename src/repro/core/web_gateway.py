@@ -84,16 +84,50 @@ class WebGateway:
         self._auth_cache: dict[str, tuple] = {}   # api_key -> (tenant, expiry)
         self.stats = GatewayStats()
         svc = self.services
+        self._load_fn = load_fn
         self.router = make_policy(
             svc.routing_policy, load_fn=load_fn,
             **({"replicas": svc.affinity_replicas}
                if svc.routing_policy == "session_affinity" else {}),
             **({"prefix_tokens": svc.prefix_tokens}
                if svc.routing_policy == "prefix_aware" else {}))
+        # per-deployment policy overrides (ModelDeploymentSpec.routing_policy)
+        self._model_routers: dict[str, object] = {}
         self.queue = GatewayQueue(capacity=svc.queue_capacity,
-                                  ttl=svc.queue_ttl)
-        if self.queue.enabled:
-            loop.every(svc.queue_drain_interval, self._queue_tick)
+                                  ttl=svc.queue_ttl, aging=svc.queue_aging)
+        self._tick_scheduled = False
+        self._ensure_queue_tick()
+
+    # -- per-deployment policy wiring (Reconciler -> gateway) ----------------
+    def _ensure_queue_tick(self):
+        if self.queue.enabled and not self._tick_scheduled:
+            self._tick_scheduled = True
+            self.loop.every(self.services.queue_drain_interval,
+                            self._queue_tick)
+
+    def set_model_policy(self, model_name: str,
+                         policy_name: Optional[str] = None, **kw):
+        """Install (or clear, with None) a routing policy that overrides
+        the gateway default for one model's requests.  Re-applying the
+        SAME policy is a no-op: the installed router keeps its state
+        (LeastLoaded in-flight counters, PrefixAware pin map) — a replicas
+        patch must not reset routing history."""
+        if policy_name is None:
+            self._model_routers.pop(model_name, None)
+            return
+        installed = self._model_routers.get(model_name)
+        if installed is not None and installed.name == policy_name:
+            return
+        self._model_routers[model_name] = make_policy(
+            policy_name, load_fn=self._load_fn, **kw)
+
+    def set_model_queue(self, model_name: str, capacity=None, ttl=None):
+        """Per-deployment gateway-queue knobs (None, None clears)."""
+        self.queue.configure_model(model_name, capacity, ttl)
+        self._ensure_queue_tick()
+
+    def router_for(self, model_name: str):
+        return self._model_routers.get(model_name, self.router)
 
     # ------------------------------------------------------------------
     def _authenticate(self, api_key: str, now: float):
@@ -115,14 +149,22 @@ class WebGateway:
     def _has_dispatchable(self, model_name: str) -> bool:
         for ep in self._ready_endpoints(model_name):
             inst = self.registry.get(endpoint_key(ep))
-            if inst is not None and inst.alive:
+            if inst is not None and inst.alive and not inst.draining:
                 return True
         return False
 
-    def _retry_after(self) -> float:
-        """Retry hint for 461/462: the queue TTL when queuing is enabled
-        (a queued twin would be held that long), else the autoscaler's
+    def _is_draining(self, ep: dict) -> bool:
+        inst = self.registry.get(endpoint_key(ep))
+        return inst is not None and inst.draining
+
+    def _retry_after(self, model_name: Optional[str] = None) -> float:
+        """Retry hint for 461/462: the queue TTL governing `model_name`
+        when queuing is enabled for it (a queued twin would be held that
+        long — per-deployment overrides included), else the autoscaler's
         scale-up cooldown — the earliest a retry could find new capacity."""
+        if model_name is not None:
+            cap, ttl = self.queue.limits_for(model_name)
+            return ttl if cap > 0 else self.services.retry_after_cooldown
         return self.queue.ttl if self.queue.enabled \
             else self.services.retry_after_cooldown
 
@@ -173,7 +215,7 @@ class WebGateway:
             self.stats.rejected_no_endpoint += 1
         if status != OK:
             return self._reject(status, stream, error_for_status(
-                status, retry_after=self._retry_after()))
+                status, retry_after=self._retry_after(model_name)))
         return self._status(OK), stream, None
 
     def _reject(self, status: int, stream: TokenStream, err: APIError
@@ -189,7 +231,14 @@ class WebGateway:
         eps = self._ready_endpoints(model_name)
         if not eps:
             return MODEL_NOT_READY
-        ep = self.router.select(eps, req)
+        # draining replicas finish their in-flight work but take no new
+        # traffic (declarative scale-down / rolling update); with every
+        # ready endpoint draining the request queues like a 461 would
+        eps = [e for e in eps if not self._is_draining(e)]
+        if not eps:
+            return MODEL_NOT_READY
+        router = self.router_for(model_name)
+        ep = router.select(eps, req)
         inst = self.registry.get(endpoint_key(ep))
         if inst is None or not inst.alive:
             # the picked endpoint is a zombie row: any live alternative?
@@ -198,13 +247,16 @@ class WebGateway:
                     and i.alive]
             if not live:
                 return INSTANCE_UNREACHABLE
-            ep = self.router.select(live, req)
+            ep = router.select(live, req)
             inst = self.registry[endpoint_key(ep)]
         self._forward(ep, inst, req,
-                      t_auth if t_auth is not None else self.lat.auth_cache_hit)
+                      t_auth if t_auth is not None else self.lat.auth_cache_hit,
+                      router=router)
         return OK
 
-    def _forward(self, ep: dict, inst, req: Request, t_auth: float):
+    def _forward(self, ep: dict, inst, req: Request, t_auth: float,
+                 router=None):
+        router = router if router is not None else self.router
         delay = t_auth + self.lat.endpoint_db_trip + self.lat.forward_hop
         key = endpoint_key(ep)
         stream = TokenStream.ensure(req)
@@ -212,10 +264,10 @@ class WebGateway:
         # client-side timestamps, and the finish hook releases this
         # dispatch's endpoint slot in the router
         epoch = stream.bind(
-            finish_hook=lambda r: self.router.note_finish(key, r),
+            finish_hook=lambda r: router.note_finish(key, r),
             transport_delay=self.lat.response_hop)
-        stream.retry_after_hint = self._retry_after()
-        self.router.note_dispatch(ep, req)
+        stream.retry_after_hint = self._retry_after(ep["model_name"])
+        router.note_dispatch(ep, req)
 
         def submit():
             if inst.submit(req, bearer=ep["bearer_token"]) != 200:
@@ -225,7 +277,8 @@ class WebGateway:
                 # fail() fires the finish hook, releasing the router slot
                 if stream.fail(error_for_status(
                         INSTANCE_UNREACHABLE,
-                        retry_after=self._retry_after()), epoch=epoch):
+                        retry_after=self._retry_after(ep["model_name"])),
+                        epoch=epoch):
                     req.status = RequestStatus.FAILED
 
         self.loop.call_after(delay, submit)
@@ -247,9 +300,11 @@ class WebGateway:
             item.req.status = RequestStatus.FAILED
             self.stats.rejected_no_endpoint += 1
             self._status(MODEL_NOT_READY)
+            held = item.deadline - item.enqueued_at   # the TTL that applied
             TokenStream.ensure(item.req).fail(error_for_status(
-                MODEL_NOT_READY, retry_after=self._retry_after(),
-                message=f"Request expired after {self.queue.ttl:.0f}s in the "
+                MODEL_NOT_READY,
+                retry_after=self._retry_after(item.model_name),
+                message=f"Request expired after {held:.0f}s in the "
                         f"gateway queue with no endpoint ready."))
         for model_name in self.queue.models():
             self._drain(model_name)
@@ -262,6 +317,9 @@ class WebGateway:
     def router_stats(self) -> dict:
         out = self.router.stats()
         out["queue"] = self.queue.stats()
+        if self._model_routers:
+            out["per_model"] = {name: r.stats()
+                                for name, r in self._model_routers.items()}
         return out
 
     def _status(self, code: int) -> int:

@@ -23,7 +23,7 @@ def main():
     args = ap.parse_args()
 
     from repro import configs
-    from repro.api import CompletionRequest, ServingClient
+    from repro.api import AdminClient, CompletionRequest, ServingClient
     from repro.config import HARDWARE, TPU_V5E
     from repro.core.controller import ClusterSpec, ControlPlane
     from repro.data.burstgpt import bursty_poisson
@@ -50,9 +50,15 @@ def main():
                                   hardware=hw),
                       engine_factory=factory)
     cp.add_tenant("serve", "sk-serve")
-    cp.add_model(cfg, instances=args.instances, est_load_time=45.0)
-    cp.run_until(120.0)
+    cp.register_model(cfg)
+    admin = AdminClient(cp)
+    dep = admin.apply(model=cfg.name, replicas=args.instances,
+                      max_replicas=max(8, args.instances),
+                      est_load_time=45.0)
+    admin.wait(cfg.name, "Ready", timeout=120.0)
+    cp.run_until(max(cp.loop.now, 120.0))
     print(f"ready endpoints: {[(e['node'], e['port']) for e in cp.ready_endpoints(cfg.name)]}")
+    print(f"deployment status: {dep.status.to_dict()}")
 
     t0 = cp.loop.now
     client = ServingClient(cp, api_key="sk-serve", default_model=cfg.name)

@@ -1,0 +1,543 @@
+"""Declarative control plane: ModelDeploymentSpec validation and wire
+round-trips, the reconciler's convergence semantics (scale-up pacing,
+drain-before-scancel scale-down, rolling updates that never drop below
+min_replicas ready, observed_generation lag, node-failure reconvergence),
+the autoscaler-as-spec-patcher webhook path, the AdminClient verbs/watch
+stream, the priority-ordered gateway queue, and the SlurmSubmit sbatch
+coercion regression."""
+import pytest
+
+from repro import configs
+from repro.api import AdminClient, APIStatusError, ServingClient
+from repro.api.admin import DeploymentWatch
+from repro.core.controller import ClusterSpec, ControlPlane
+from repro.core.deployments import (COND_AVAILABLE, COND_PROGRESSING,
+                                    COND_READY, Condition, DeploymentStatus,
+                                    ModelDeploymentSpec)
+from repro.core.router import GatewayQueue
+from repro.core.slurm import JobState
+from repro.engine.request import Request, SamplingParams
+
+MODEL = "mistral-small-24b"
+
+
+def mk_plane(**kw):
+    spec = ClusterSpec(num_nodes=kw.pop("num_nodes", 4),
+                       gpus_per_node=kw.pop("gpus_per_node", 2),
+                       max_num_seqs=16, num_blocks=512, block_size=16,
+                       max_model_len=2048, **kw)
+    cp = ControlPlane(spec)
+    cp.add_tenant("uni", "sk-test")
+    cp.register_model(configs.get(MODEL))
+    return cp
+
+
+def mk_admin(**kw):
+    cp = mk_plane(**kw)
+    return cp, AdminClient(cp)
+
+
+def req(n=16, out=4, priority=0):
+    return Request(prompt_tokens=[1] * n, priority=priority,
+                   sampling=SamplingParams(target_output_len=out,
+                                           max_new_tokens=out))
+
+
+# ---------------------------------------------------------------------------
+# spec validation + wire round-trip
+# ---------------------------------------------------------------------------
+
+def test_spec_roundtrip():
+    spec = ModelDeploymentSpec(model=MODEL, replicas=2, min_replicas=1,
+                               max_replicas=4, routing_policy="least_loaded",
+                               queue_capacity=16, queue_ttl=20.0,
+                               priority_class=3, gpus_per_node=2,
+                               est_load_time=30.0, drain_grace=45.0)
+    spec.validate()
+    assert ModelDeploymentSpec.from_dict(spec.to_dict()) == spec
+
+
+@pytest.mark.parametrize("field,value", [
+    ("model", ""), ("model", 7), ("model_version", ""),
+    ("replicas", "2"), ("replicas", -1), ("min_replicas", -1),
+    ("max_replicas", 0), ("routing_policy", "weighted_random"),
+    ("queue_capacity", -1), ("queue_ttl", 0.0), ("priority_class", 1.5),
+    ("gpus_per_node", 0), ("nodes", 0), ("partition", ""),
+    ("est_load_time", -1.0), ("max_model_len", 0), ("drain_grace", -1.0),
+])
+def test_spec_validation_is_field_addressed(field, value):
+    spec = ModelDeploymentSpec(model=MODEL)
+    setattr(spec, field, value)
+    with pytest.raises(APIStatusError) as ei:
+        spec.validate()
+    assert ei.value.status == 422
+    assert ei.value.error.param == field
+
+
+def test_spec_replicas_must_lie_in_window():
+    with pytest.raises(APIStatusError) as ei:
+        ModelDeploymentSpec(model=MODEL, replicas=9, max_replicas=4).validate()
+    assert ei.value.error.param == "replicas"
+    with pytest.raises(APIStatusError) as ei:
+        ModelDeploymentSpec(model=MODEL, min_replicas=5,
+                            max_replicas=2).validate()
+    assert ei.value.error.param == "max_replicas"
+
+
+def test_apply_unknown_model_rejected():
+    cp, admin = mk_admin()
+    with pytest.raises(APIStatusError) as ei:
+        admin.apply(model="never-registered")
+    assert ei.value.error.param == "model"
+
+
+def test_condition_and_status_roundtrip():
+    st = DeploymentStatus()
+    assert st.set_condition(COND_READY, True, "AllReplicasReady", "2/2", 5.0)
+    assert not st.set_condition(COND_READY, True, "AllReplicasReady",
+                                "2/2 again", 9.0)   # no flip
+    cond = st.condition(COND_READY)
+    assert cond.last_transition_time == 5.0 and cond.message == "2/2 again"
+    assert Condition.from_dict(cond.to_dict()) == cond
+
+
+# ---------------------------------------------------------------------------
+# reconciler convergence
+# ---------------------------------------------------------------------------
+
+def test_apply_converges_and_observed_generation_lags():
+    cp, admin = mk_admin()
+    dep = admin.apply(model=MODEL, replicas=2, max_replicas=4,
+                      est_load_time=10.0)
+    assert dep.generation == 1 and dep.status.observed_generation == 0
+    cp.run_until(12.0)   # submitted but still loading
+    assert dep.status.observed_generation == 0
+    assert not dep.status.condition(COND_READY).status
+    assert admin.wait(MODEL, "Ready", timeout=120.0)
+    assert dep.status.observed_generation == 1
+    assert dep.status.ready_replicas == 2
+    # spec change: generation moves immediately, observed lags again
+    admin.scale(MODEL, 3)
+    assert dep.generation == 2 and dep.status.observed_generation == 1
+    cp.run_until(cp.loop.now + 6.0)
+    assert dep.status.observed_generation == 1       # not converged yet
+    assert admin.wait(MODEL, "Ready", timeout=120.0)
+    assert dep.status.observed_generation == 2
+    cp.db.check_invariants()
+
+
+def test_apply_identical_spec_is_noop():
+    cp, admin = mk_admin()
+    dep = admin.apply(model=MODEL, replicas=1, est_load_time=10.0)
+    g = dep.generation
+    assert admin.apply(model=MODEL, replicas=1, est_load_time=10.0) is dep
+    assert dep.generation == g
+
+
+def test_scale_outside_window_rejected():
+    cp, admin = mk_admin()
+    admin.apply(model=MODEL, replicas=1, min_replicas=1, max_replicas=2,
+                est_load_time=5.0)
+    with pytest.raises(APIStatusError) as ei:
+        admin.scale(MODEL, 5)
+    assert ei.value.error.param == "replicas"
+
+
+def test_scale_down_drains_in_flight_before_scancel():
+    cp, admin = mk_admin(num_nodes=4, gpus_per_node=1)
+    dep = admin.apply(model=MODEL, replicas=2, max_replicas=4,
+                      est_load_time=10.0, drain_grace=300.0)
+    assert admin.wait(MODEL, "Ready", timeout=120.0)
+    gw = cp.web_gateway
+    # long-running requests on both instances
+    reqs = [req(n=64, out=400) for _ in range(6)]
+    for r in reqs:
+        assert gw.handle("sk-test", MODEL, r) == 200
+    cp.run_until(cp.loop.now + 2.0)
+    busy = [i for i in cp.registry.values() if i.engine.has_work()]
+    assert len(busy) == 2
+    admin.scale(MODEL, 1)
+    # next reconcile tick starts the drain: the victim keeps serving
+    cp.run_until(cp.loop.now + 6.0)
+    draining = [i for i in cp.registry.values() if i.draining]
+    assert len(draining) == 1
+    victim = draining[0]
+    assert victim.alive and victim.engine.has_work()
+    assert dep.status.draining_replicas == 1
+    # new requests are routed around the draining instance
+    before = victim.engine.metrics.requests_finished + \
+        len(victim.engine.scheduler.running) + \
+        len(victim.engine.scheduler.waiting)
+    r_new = req(out=2)
+    assert gw.handle("sk-test", MODEL, r_new) == 200
+    cp.run_until(cp.loop.now + 1.0)
+    after = victim.engine.metrics.requests_finished + \
+        len(victim.engine.scheduler.running) + \
+        len(victim.engine.scheduler.waiting)
+    assert after == before
+    # drain completes: every stream finishes, nothing failed, then scancel
+    cp.run_until(cp.loop.now + 400.0)
+    assert all(r.status.value == "finished" for r in reqs)
+    assert not victim.alive                      # scancel'd after idle
+    assert len(cp.ready_endpoints(MODEL)) == 1
+    assert dep.status.ready_replicas == 1 and not dep.status.draining_replicas
+    cp.db.check_invariants()
+
+
+def test_scale_down_grace_deadline_forces_cancel():
+    cp, admin = mk_admin(num_nodes=4, gpus_per_node=1)
+    admin.apply(model=MODEL, replicas=2, max_replicas=4,
+                est_load_time=10.0, drain_grace=8.0)
+    assert admin.wait(MODEL, "Ready", timeout=120.0)
+    reqs = [req(n=64, out=100_000) for _ in range(4)]   # never finishes
+    gw = cp.web_gateway
+    for r in reqs:
+        assert gw.handle("sk-test", MODEL, r) == 200
+    cp.run_until(cp.loop.now + 2.0)
+    admin.scale(MODEL, 1)
+    cp.run_until(cp.loop.now + 60.0)
+    # grace expired -> force scancel; the in-flight work on the victim
+    # failed, but the deployment converged to 1 replica
+    assert len(cp.ready_endpoints(MODEL)) == 1
+    assert sum(1 for i in cp.registry.values() if i.alive) == 1
+    cp.db.check_invariants()
+
+
+def test_rolling_update_never_drops_below_min_replicas_ready():
+    cp, admin = mk_admin(num_nodes=6, gpus_per_node=1)
+    dep = admin.apply(model=MODEL, replicas=3, min_replicas=2,
+                      max_replicas=4, est_load_time=10.0)
+    assert admin.wait(MODEL, "Ready", timeout=200.0)
+    assert dep.status.ready_replicas == 3
+    old_jobs = set(dep._job_template)
+    ready_floor = []
+    cp.loop.every(1.0, lambda now: ready_floor.append(
+        dep.status.ready_replicas))
+    # bump the template (new model version -> staged replace with drain)
+    admin.apply(model=MODEL, model_version="2", replicas=3, min_replicas=2,
+                max_replicas=4, est_load_time=10.0)
+    assert dep.template_generation == 2
+    assert admin.wait(MODEL, "Ready", timeout=600.0)
+    cp.run_until(cp.loop.now + 30.0)
+    # converged on 3 replicas, ALL on the new template, none of the old jobs
+    assert dep.status.ready_replicas == 3
+    assert set(dep._job_template) & old_jobs == set()
+    assert all(g == 2 for g in dep._job_template.values())
+    assert dep.status.observed_generation == dep.generation
+    # the rolling invariant: ready (serving) replicas never below min
+    assert min(ready_floor) >= 2
+    # and the version actually rolled out on the wire
+    assert all(ep["model_version"] == "2"
+               for ep in cp.ready_endpoints(MODEL))
+    cp.db.check_invariants()
+
+
+def test_node_failure_restores_spec_with_condition_trail():
+    cp, admin = mk_admin()
+    dep = admin.apply(model=MODEL, replicas=2, max_replicas=4,
+                      est_load_time=10.0)
+    assert admin.wait(MODEL, "Ready", timeout=150.0)
+    t_kill = cp.loop.now
+    victim = cp.ready_endpoints(MODEL)[0]["node"]
+    cp.slurm.fail_node(victim)
+    cp.run_until(cp.loop.now + 10.0)
+    cond = dep.status.condition(COND_READY)
+    assert not cond.status and cond.reason == "ReplicaFailure"
+    assert admin.wait(MODEL, "Ready", timeout=200.0)
+    assert dep.status.ready_replicas == 2
+    flips = [(c, s, r) for t, c, s, r in dep.transitions if t >= t_kill]
+    assert (COND_READY, False, "ReplicaFailure") in flips
+    assert (COND_READY, True, "AllReplicasReady") in flips
+    cp.db.check_invariants()
+
+
+def test_delete_tears_everything_down():
+    cp, admin = mk_admin()
+    admin.apply(model=MODEL, replicas=2, max_replicas=4, est_load_time=5.0)
+    assert admin.wait(MODEL, "Ready", timeout=120.0)
+    assert admin.delete(MODEL)
+    assert not admin.delete(MODEL)            # second delete: gone
+    cp.run_until(cp.loop.now + 30.0)
+    assert admin.get(MODEL) is None
+    assert cp.db["ai_model_configurations"].rows == {}
+    assert cp.db["ai_model_endpoint_jobs"].rows == {}
+    assert not any(i.alive for i in cp.instances_spawned)
+    cp.db.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# autoscaler as spec patcher
+# ---------------------------------------------------------------------------
+
+def test_webhook_patches_spec_clamped_to_window():
+    cp, admin = mk_admin()
+    dep = admin.apply(model=MODEL, replicas=1, min_replicas=1,
+                      max_replicas=2, est_load_time=5.0)
+    gw = cp.metrics_gateway
+    for _ in range(4):
+        assert gw.grafana_webhook({"config_id": dep.config_id,
+                                   "delta": +1, "rule": "qt"}) == 200
+    assert dep.spec.replicas == 2            # clamped to max_replicas
+    assert len(gw.scale_events) == 1         # clamped no-ops are not events
+    # the DB row is actuation state: reconciler syncs it to the spec
+    cp.run_until(cp.loop.now + 10.0)
+    assert cp.db["ai_model_configurations"].get(
+        dep.config_id)["instances"] == 2
+    for _ in range(4):
+        gw.grafana_webhook({"config_id": dep.config_id,
+                            "delta": -1, "rule": "idle"})
+    assert dep.spec.replicas == 1            # clamped to min_replicas
+    assert len(gw.scale_events) == 2
+
+
+def test_webhook_legacy_path_for_unmanaged_configs():
+    cp, admin = mk_admin()
+    row = cp.add_model(configs.get(MODEL), instances=1, est_load_time=5.0)
+    assert cp.metrics_gateway.grafana_webhook(
+        {"config_id": row["id"], "delta": +1, "rule": "qt"}) == 200
+    assert cp.db["ai_model_configurations"].get(row["id"])["instances"] == 2
+
+
+def test_legacy_job_worker_skips_managed_configs():
+    cp, admin = mk_admin()
+    dep = admin.apply(model=MODEL, replicas=1, est_load_time=5.0)
+    assert admin.wait(MODEL, "Ready", timeout=120.0)
+    # a direct DB mutation on a MANAGED config is reverted by the
+    # reconciler (the spec is the source of truth), not amplified by the
+    # legacy Job Worker loop
+    cp.db["ai_model_configurations"].update(dep.config_id, instances=4)
+    cp.run_until(cp.loop.now + 60.0)
+    assert cp.db["ai_model_configurations"].get(
+        dep.config_id)["instances"] == 1
+    assert len(cp.ready_endpoints(MODEL)) == 1
+
+
+# ---------------------------------------------------------------------------
+# AdminClient verbs + watch stream
+# ---------------------------------------------------------------------------
+
+def test_admin_verbs_and_watch_events():
+    cp, admin = mk_admin()
+    watch = admin.watch()
+    dep = admin.apply(model=MODEL, replicas=1, max_replicas=3,
+                      est_load_time=5.0)
+    assert admin.get(MODEL) is dep
+    assert admin.list() == [dep]
+    assert admin.status(MODEL)["spec"]["model"] == MODEL
+    assert admin.wait(MODEL, "Ready", timeout=120.0)
+    admin.scale(MODEL, 2)
+    assert admin.wait(MODEL, "Ready", timeout=120.0)
+    admin.delete(MODEL)
+    types = [e.type for e in watch.events]
+    assert types[0] == "ADDED"
+    assert "SCALED" in types and "CONDITION" in types
+    assert types[-1] == "DELETED"
+    # events carry full to_dict snapshots (the wire view)
+    assert watch.events[0].object["spec"]["replicas"] == 1
+    seen = []
+    watch.subscribe(seen.append)
+    watch.stop()
+    assert watch.closed
+    # a stopped watch is unsubscribed: further verbs deliver nothing
+    admin.apply(model=MODEL, replicas=1, est_load_time=5.0)
+    assert seen == []
+
+
+def test_watch_is_a_stream_session():
+    # the watch reuses the TokenStream subscription machinery
+    from repro.api.streaming import StreamSession
+    assert issubclass(DeploymentWatch, StreamSession)
+    w = DeploymentWatch()
+    done = []
+    w.on_done(done.append)
+    w.stop()
+    assert done == [w]
+
+
+def test_apply_spec_object_and_dict_forms():
+    cp, admin = mk_admin()
+    dep = admin.apply(ModelDeploymentSpec(model=MODEL, replicas=1,
+                                          est_load_time=5.0))
+    assert dep.spec.est_load_time == 5.0
+    dep2 = admin.apply({"model": MODEL, "replicas": 1,
+                        "est_load_time": 5.0})
+    assert dep2 is dep                       # same deployment, no-op
+    with pytest.raises(TypeError):
+        admin.apply(ModelDeploymentSpec(model=MODEL), replicas=2)
+
+
+# ---------------------------------------------------------------------------
+# per-deployment gateway policy
+# ---------------------------------------------------------------------------
+
+def test_per_deployment_routing_policy_override():
+    cp, admin = mk_admin()
+    admin.apply(model=MODEL, replicas=2, max_replicas=4,
+                routing_policy="session_affinity", est_load_time=5.0)
+    assert admin.wait(MODEL, "Ready", timeout=120.0)
+    gw = cp.web_gateway
+    assert gw.router_for(MODEL).name == "session_affinity"
+    assert gw.router_for("other-model") is gw.router
+    # every turn of one session lands on the same instance
+    for _ in range(6):
+        r = req(out=2)
+        r.session_id = "chat-1"
+        assert gw.handle("sk-test", MODEL, r) == 200
+    cp.run_until(cp.loop.now + 30.0)
+    loads = sorted(i.engine.metrics.requests_finished
+                   for i in cp.registry.values())
+    assert loads == [0, 6]
+    assert "per_model" in gw.router_stats()
+
+
+# ---------------------------------------------------------------------------
+# priority-ordered gateway queue (+ aging) — ROADMAP follow-up
+# ---------------------------------------------------------------------------
+
+def test_queue_dequeues_by_priority_fifo_within_class():
+    q = GatewayQueue(capacity=8, ttl=60.0)
+    sent = []
+    disp = lambda r: (sent.append(r.priority), 200)[1]
+    for pri in (0, 5, 0, 5, 2):
+        q.offer(req(priority=pri), MODEL, 0.0, dispatch=disp)
+    q.drain(MODEL, 1.0, can_dispatch=lambda m: True)
+    assert sent == [5, 5, 2, 0, 0]
+
+
+def test_queue_fifo_preserved_for_equal_priorities():
+    q = GatewayQueue(capacity=8, ttl=60.0)
+    sent = []
+    for i in range(4):
+        r = req()
+        r.tag = i
+        q.offer(r, MODEL, float(i), dispatch=lambda rr: (sent.append(rr.tag),
+                                                         200)[1])
+    q.drain(MODEL, 5.0, can_dispatch=lambda m: True)
+    assert sent == [0, 1, 2, 3]
+
+
+def test_queue_aging_prevents_starvation():
+    # aging knob: 1 priority point per queued second — a priority-0 request
+    # waiting 10 s outranks a fresh priority-5 arrival
+    q = GatewayQueue(capacity=8, ttl=60.0, aging=1.0)
+    sent = []
+    disp = lambda r: (sent.append(r.priority), 200)[1]
+    q.offer(req(priority=0), MODEL, 0.0, dispatch=disp)
+    q.offer(req(priority=5), MODEL, 10.0, dispatch=disp)
+    q.drain(MODEL, 10.0, can_dispatch=lambda m: True)
+    assert sent == [0, 5]
+    # without aging the priority-5 request would have gone first
+    q2 = GatewayQueue(capacity=8, ttl=60.0, aging=0.0)
+    sent2 = []
+    disp2 = lambda r: (sent2.append(r.priority), 200)[1]
+    q2.offer(req(priority=0), MODEL, 0.0, dispatch=disp2)
+    q2.offer(req(priority=5), MODEL, 10.0, dispatch=disp2)
+    q2.drain(MODEL, 10.0, can_dispatch=lambda m: True)
+    assert sent2 == [5, 0]
+
+
+def test_queue_per_model_limits_from_spec():
+    q = GatewayQueue(capacity=0)             # gateway-wide queuing disabled
+    assert not q.enabled
+    q.configure_model(MODEL, capacity=2, ttl=5.0)
+    assert q.enabled
+    assert q.offer(req(), MODEL, 0.0, dispatch=lambda r: 200)
+    assert q.offer(req(), MODEL, 0.0, dispatch=lambda r: 200)
+    assert not q.offer(req(), MODEL, 0.0, dispatch=lambda r: 200)
+    assert not q.offer(req(), "other", 0.0, dispatch=lambda r: 200)
+    assert len(q.expire(5.5)) == 2           # per-model TTL, not global 30 s
+    q.configure_model(MODEL, None, None)
+    assert not q.enabled
+
+
+def test_deployment_queue_knobs_reach_gateway():
+    cp, admin = mk_admin()
+    admin.apply(model=MODEL, replicas=1, est_load_time=30.0,
+                queue_capacity=4, queue_ttl=120.0)
+    gw = cp.web_gateway
+    # no ready endpoint yet: requests ride the per-deployment queue
+    client = ServingClient(cp, api_key="sk-test", default_model=MODEL)
+    pend = client.completions(prompt=[1, 2, 3], max_tokens=4)
+    assert pend.status == 202
+    resp = pend.result(max_wait=200.0)
+    assert resp.choices[0].finish_reason in ("stop", "length")
+
+
+def test_reapply_same_policy_keeps_router_state():
+    cp, admin = mk_admin()
+    admin.apply(model=MODEL, replicas=1, max_replicas=4,
+                routing_policy="least_loaded", est_load_time=5.0)
+    router = cp.web_gateway.router_for(MODEL)
+    router.picks[("n", 1)] = 7          # routing history
+    # a replicas-only re-apply must NOT rebuild the router (that would
+    # wipe LeastLoaded's in-flight correction and herd the next burst)
+    admin.apply(model=MODEL, replicas=2, max_replicas=4,
+                routing_policy="least_loaded", est_load_time=5.0)
+    assert cp.web_gateway.router_for(MODEL) is router
+    # switching policy does swap it
+    admin.apply(model=MODEL, replicas=2, max_replicas=4,
+                routing_policy="round_robin", est_load_time=5.0)
+    assert cp.web_gateway.router_for(MODEL).name == "round_robin"
+
+
+def test_retry_after_honours_per_model_ttl():
+    cp, admin = mk_admin()
+    admin.apply(model=MODEL, replicas=1, est_load_time=500.0,
+                queue_capacity=1, queue_ttl=90.0)
+    gw = cp.web_gateway
+    assert gw._retry_after(MODEL) == 90.0
+    # gateway-wide queuing is off: other models hint the scale-up cooldown
+    assert gw._retry_after("other") == cp.spec.services.retry_after_cooldown
+    # queue full -> the 461 wire error carries the per-model TTL hint, and
+    # the queued twin's expiry message reports the TTL that applied
+    client = ServingClient(cp, api_key="sk-test", default_model=MODEL)
+    first = client.completions(prompt=[1, 2, 3], max_tokens=4)
+    assert first.status == 202
+    with pytest.raises(APIStatusError) as ei:
+        client.completions(prompt=[1, 2, 3], max_tokens=4)
+    assert ei.value.error.retry_after == 90.0
+    cp.run_until(cp.loop.now + 120.0)
+    err = first.stream.error
+    assert err is not None and "90s" in err.message
+    assert err.retry_after == 90.0
+
+
+def test_manifest_unknown_field_is_422():
+    with pytest.raises(APIStatusError) as ei:
+        ModelDeploymentSpec.from_dict({"model": MODEL, "replica": 3})
+    assert ei.value.status == 422
+    assert ei.value.error.param == "replica"
+
+
+# ---------------------------------------------------------------------------
+# satellite regression: SlurmSubmit sbatch coercion
+# ---------------------------------------------------------------------------
+
+def test_slurm_submit_coerces_sbatch_directives_after_spread():
+    cp, _ = mk_admin()
+    job_id = cp.slurm_submit.submit(
+        "config_id=1,endpoint_job_id=1,model=m,version=1,"
+        "gpus=2,nodes=1,partition=gpu,load=5.0,priority=7,bearer=tok-x")
+    job = cp.slurm.jobs[job_id]
+    # the **params spread used to overwrite the coerced ints with the raw
+    # strings from the comma-delimited parameter string
+    assert job.params["gpus"] == 2 and type(job.params["gpus"]) is int
+    assert job.params["nodes"] == 1 and type(job.params["nodes"]) is int
+    assert job.params["priority"] == 7 \
+        and type(job.params["priority"]) is int
+    assert job.params["partition"] == "gpu"
+    assert job.priority == 7
+
+
+def test_priority_class_orders_slurm_scheduling():
+    # one free GPU slot, two pending jobs: the higher priority_class job
+    # must be placed first even though it was submitted second
+    cp, admin = mk_admin(num_nodes=1, gpus_per_node=1)
+    cp.register_model(configs.get(MODEL))
+    lo = cp.slurm_submit.submit("gpus=1,priority=0,model=x,version=1,"
+                                "endpoint_job_id=0,bearer=t,load=1")
+    hi = cp.slurm_submit.submit("gpus=1,priority=9,model=x,version=1,"
+                                "endpoint_job_id=0,bearer=t,load=1")
+    cp.run_until(10.0)
+    assert cp.slurm.job_state(hi) == JobState.RUNNING
+    assert cp.slurm.job_state(lo) == JobState.PENDING

@@ -90,6 +90,8 @@ class ClientRecorder:
             "ttft_p99_ms": float(np.percentile(ttft, 99) * 1e3),
             "ttft_std_ms": float(np.std(ttft) * 1e3),
             "tpot_median_ms": float(np.median(tpot) * 1e3) if len(tpot) else 0,
+            "tpot_p99_ms": float(np.percentile(tpot, 99) * 1e3)
+            if len(tpot) else 0,
             "tpot_std_ms": float(np.std(tpot) * 1e3) if len(tpot) else 0,
             "throughput_req_s": len(recs) / dur if dur else 0,
             "throughput_out_tok_s": out_tokens / dur if dur else 0,

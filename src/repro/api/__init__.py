@@ -9,7 +9,8 @@ program against; `repro.core` (the gateway, the reconciler) imports it,
 never the other way around.
 """
 from repro.api.admin import AdminClient, DeploymentWatch, WatchEvent
-from repro.api.client import PendingCompletion, ServingClient
+from repro.api.client import (MultiPendingCompletion, PendingCompletion,
+                              ServingClient)
 from repro.api.errors import (APIError, APIStatusError, ERROR_TABLE,
                               ErrorSpec, SUCCESS_STATUSES, error_for_status,
                               validation_error)
@@ -25,7 +26,8 @@ __all__ = [
     "ChatCompletionChunk", "ChatCompletionRequest", "ChatCompletionResponse",
     "ChatMessage", "ChunkChoice", "ChunkDelta", "CompletionChoice",
     "CompletionRequest", "CompletionResponse", "DeploymentWatch",
-    "ERROR_TABLE", "ErrorSpec", "PendingCompletion", "ServingClient",
+    "ERROR_TABLE", "ErrorSpec", "MultiPendingCompletion",
+    "PendingCompletion", "ServingClient",
     "StreamSession", "SUCCESS_STATUSES", "TokenEvent", "TokenStream",
     "Usage", "WatchEvent", "encode_text", "error_for_status",
     "validation_error",

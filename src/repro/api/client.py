@@ -21,10 +21,12 @@ the stream closes (or use `.response()` after driving the loop yourself).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional, Union
 
 from repro.api.errors import APIStatusError
-from repro.api.schemas import ChatCompletionRequest, CompletionRequest
+from repro.api.schemas import (ChatCompletionRequest, CompletionRequest,
+                               Usage)
 from repro.api.streaming import TokenStream
 
 
@@ -55,6 +57,37 @@ class PendingCompletion:
         response (the blocking-HTTP-call analogue)."""
         if not self.stream.closed and self.loop is not None:
             self.loop.run_while(lambda: not self.stream.closed,
+                                max_t=self.loop.now + max_wait)
+        return self.response()
+
+
+class MultiPendingCompletion:
+    """Handle for an ``n > 1`` fan-out: the client submits one engine
+    request per requested choice and aggregates them into a single
+    OpenAI-shaped response — choices indexed 0..n-1, prompt tokens counted
+    once, completion tokens summed (the OpenAI usage contract)."""
+
+    def __init__(self, streams: list, loop):
+        self.streams = streams
+        self.loop = loop
+
+    @property
+    def done(self) -> bool:
+        return all(s.closed for s in self.streams)
+
+    def response(self):
+        parts = [s.response() for s in self.streams]   # raises on any error
+        choices = [dataclasses.replace(p.choices[0], index=i)
+                   for i, p in enumerate(parts)]
+        usage = Usage(prompt_tokens=parts[0].usage.prompt_tokens,
+                      completion_tokens=sum(p.usage.completion_tokens
+                                            for p in parts))
+        return dataclasses.replace(parts[0], choices=choices, usage=usage)
+
+    def result(self, max_wait: float = 600.0):
+        """Drive the event loop until every choice's stream closes."""
+        if not self.done and self.loop is not None:
+            self.loop.run_while(lambda: not self.done,
                                 max_t=self.loop.now + max_wait)
         return self.response()
 
@@ -119,6 +152,20 @@ class ServingClient:
                             f"keywords, not both (got request and "
                             f"{sorted(fields)})")
         request.validate()                      # raises APIStatusError(422)
+        if request.n > 1:
+            # fan-out: one engine request per choice (each samples
+            # independently — token synthesis keys on the request id).
+            # A rejection raises immediately; already-accepted siblings
+            # keep streaming and are simply discarded by the caller.
+            streams = []
+            for _ in range(request.n):
+                status, stream, error = self.gateway.api_handle(
+                    self.api_key, request.model, request.to_engine_request(),
+                    kind=kind)
+                if error is not None:
+                    raise APIStatusError(error)
+                streams.append(stream)
+            return MultiPendingCompletion(streams, self.loop)
         ereq = request.to_engine_request()
         status, stream, error = self.gateway.api_handle(
             self.api_key, request.model, ereq, kind=kind)

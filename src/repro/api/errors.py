@@ -107,3 +107,23 @@ def error_for_status(status: int, *, param: Optional[str] = None,
 def validation_error(param: Optional[str], message: str) -> APIError:
     """Convenience: a 422 with the offending field name attached."""
     return error_for_status(422, param=param, message=message)
+
+
+# -- shared field-addressed validation helpers (spec/schema modules) --------
+
+def raise_validation(param: str, message: str):
+    """Raise the structured 422 for one offending field."""
+    raise APIStatusError(validation_error(param, message))
+
+
+def check_int(v, param: str, minimum: Optional[int] = None):
+    """Strict int (bools excluded by `type is int`) with optional floor."""
+    if type(v) is not int:
+        raise_validation(param, f"{param} {v!r} must be an int")
+    if minimum is not None and v < minimum:
+        raise_validation(param, f"{param} {v!r} must be >= {minimum}")
+
+
+def check_number(v, param: str, minimum: float = 0.0):
+    if not isinstance(v, (int, float)) or isinstance(v, bool) or v < minimum:
+        raise_validation(param, f"{param} {v!r} must be a number >= {minimum}")

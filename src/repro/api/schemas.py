@@ -83,6 +83,7 @@ class _RequestBase:
     top_k: int = 0
     top_p: float = 1.0
     max_tokens: int = 128
+    n: int = 1                  # choices per request (fan-out, OpenAI `n`)
     stream: bool = False
     priority: int = 0
     session_id: Optional[str] = None
@@ -113,6 +114,11 @@ class _RequestBase:
         if type(self.max_tokens) is not int or self.max_tokens < 1:
             _fail("max_tokens",
                   f"max_tokens {self.max_tokens!r} must be an int >= 1")
+        if type(self.n) is not int or not (1 <= self.n <= 16):
+            _fail("n", f"n {self.n!r} must be an int in [1, 16]")
+        if self.n > 1 and self.stream:
+            _fail("n", "n > 1 is not supported with stream=true; "
+                       "collect the choices from the non-streaming response")
         try:
             self._sampling().validate()
         except ValueError as e:
@@ -122,6 +128,7 @@ class _RequestBase:
         return {"model": self.model,
                 "temperature": self.temperature, "top_k": self.top_k,
                 "top_p": self.top_p, "max_tokens": self.max_tokens,
+                "n": self.n,
                 "stream": self.stream, "priority": self.priority,
                 "session_id": self.session_id, "seed": self.seed,
                 "stop_token": self.stop_token,

@@ -131,6 +131,25 @@ class TokenStream(StreamSession):
             self.finish_reason = None
         return self.dispatch_epoch
 
+    def restart(self):
+        """Discard buffered token events for a transparent re-run of the
+        whole request (disaggregated instance-loss retry): the regenerated
+        sequence becomes the stream's content, so the terminal views
+        (`response()` / `chunks()`) describe exactly the completion the
+        retry delivered — never pre-crash tokens followed by a second full
+        copy.  Live subscribers see the tokens stream again, like an
+        engine-side preemption recompute."""
+        self.events = []
+
+    def release_dispatch(self):
+        """Release the current dispatch's endpoint slot (fires the finish
+        hook once) WITHOUT closing the stream — used by two-hop flows
+        (disaggregated prefill handoff) where the request leaves one
+        instance mid-stream and will be re-dispatched to another."""
+        hook, self._finish_hook = self._finish_hook, None
+        if hook is not None:
+            hook(self.req)
+
     def fail(self, error: APIError, epoch: Optional[int] = None) -> bool:
         """Deliver a terminal error event (queue expiry, dead instance,
         gateway rejection).  No-op if already closed or if `epoch` is stale

@@ -195,6 +195,14 @@ class ServiceConfig:
     queue_drain_interval: float = 1.0  # periodic expiry/drain tick
     queue_aging: float = 0.0           # priority points per queued second
     retry_after_cooldown: float = 60.0  # 461/462 retry hint, queue disabled
+    # admission control: when queuing, reject-early (461 + retry_after)
+    # any request whose roofline-estimated service time already exceeds
+    # the queue TTL it would be held under — it could never be served
+    # within its budget, so fail fast instead of parking a doomed request
+    admission_control: bool = False
+    # default prefill->decode KV handoff link (bytes/s) for disaggregated
+    # models configured outside the declarative spec path
+    kv_transfer_bandwidth: float = 40e9
 
 
 @dataclass(frozen=True)

@@ -32,6 +32,9 @@ class AlertRule:
     for_duration: float         # sustained seconds before firing
     delta: int                  # instances to add/remove
     cooldown: float = 60.0      # per-config refractory period
+    # disaggregated deployments: which phase pool the webhook patch targets
+    # (None = the deployment's replicas / decode pool by default)
+    pool: Optional[str] = None
 
     def breached(self, value: float) -> bool:
         return value > self.threshold if self.op == "gt" \
@@ -54,6 +57,21 @@ GATEWAY_QUEUE_SCALE_UP = AlertRule(
     name="gateway_queue>0_for_15s", metric="gateway_queued", op="gt",
     threshold=0.5, for_duration=15.0, delta=+1, cooldown=60.0)
 
+# disaggregated deployments (repro.core.disagg): the Metrics Gateway
+# scrapes per-phase queue depths (`queue_time_max_prefill` / `_decode`),
+# so prefill and decode pools grow independently — sustained prefill
+# backlog must not add decode replicas and vice versa.  Inert for unified
+# deployments (the metrics are absent from their scrape aggregates).
+PREFILL_QUEUE_SCALE_UP = AlertRule(
+    name="prefill_queue_time>5s_for_30s", metric="queue_time_max_prefill",
+    op="gt", threshold=5.0, for_duration=30.0, delta=+1, cooldown=60.0,
+    pool="prefill")
+
+DECODE_QUEUE_SCALE_UP = AlertRule(
+    name="decode_queue_time>5s_for_30s", metric="queue_time_max_decode",
+    op="gt", threshold=5.0, for_duration=30.0, delta=+1, cooldown=60.0,
+    pool="decode")
+
 
 class Autoscaler:
     """Evaluates alert rules over the scrape history and fires the Grafana
@@ -66,6 +84,7 @@ class Autoscaler:
         self.loop = loop
         self.rules = rules if rules is not None \
             else [QUEUE_TIME_SCALE_UP, GATEWAY_QUEUE_SCALE_UP,
+                  PREFILL_QUEUE_SCALE_UP, DECODE_QUEUE_SCALE_UP,
                   IDLE_SCALE_DOWN]
         # (config_id, rule name) -> breach start time
         self._pending: dict[tuple, float] = {}
@@ -103,4 +122,5 @@ class Autoscaler:
                 self.fired.append((now, cfg_id, rule.name))
                 self.gw.grafana_webhook({"config_id": cfg_id,
                                          "delta": rule.delta,
-                                         "rule": rule.name})
+                                         "rule": rule.name,
+                                         "pool": rule.pool})

@@ -90,7 +90,9 @@ class ControlPlane:
         self.web_gateway = WebGateway(
             self.db, self.loop, self.registry,
             services=self.spec.services,
-            load_fn=self.metrics_gateway.endpoint_load)
+            load_fn=self.metrics_gateway.endpoint_load,
+            service_estimator=self.estimate_service_time)
+        self._cost_cache: dict[str, object] = {}
         # queued gateway demand feeds the scrape; fresh endpoints drain it
         self.metrics_gateway.attach_web_gateway(self.web_gateway)
         self.endpoint_worker.on_ready = self.web_gateway.notify_ready
@@ -130,6 +132,26 @@ class ControlPlane:
             slurm_partition=self.spec.partition)
 
     # ------------------------------------------------------------------
+    def estimate_service_time(self, model_name: str, req) -> Optional[float]:
+        """Roofline service-time estimate (prefill + full decode) for one
+        request — the gateway's queue-admission signal.  Uses the model's
+        configured tensor-parallel degree (gpus_per_node), matching the
+        engines the request would actually run on."""
+        cfg = self.model_cfgs.get(model_name)
+        if cfg is None:
+            return None
+        rows = self.db["ai_model_configurations"].select(
+            model_name=model_name)
+        tp = int(rows[0]["gpus_per_node"]) if rows else 1
+        cost = self._cost_cache.get((model_name, tp))
+        if cost is None:
+            from repro.engine.costmodel import RooflineCost
+            cost = self._cost_cache[(model_name, tp)] = RooflineCost(
+                cfg, self.spec.hardware, tp=tp)
+        n, out = req.prompt_len, req.target_len()
+        return cost.prefill_time(n, n) + out * cost.decode_time(1, n + out)
+
+    # ------------------------------------------------------------------
     def _default_engine(self, cfg: ModelConfig, tp: int) -> LLMEngine:
         ex = SimExecutor(cfg, self.spec.hardware, tp=tp)
         return LLMEngine(cfg, ex, num_blocks=self.spec.num_blocks,
@@ -141,19 +163,28 @@ class ControlPlane:
     def _job_payload(self, job, node, params: dict):
         """The .slurm script body: register with the Endpoint Gateway (curl
         POST), then start the vLLM server on the assigned port."""
+        phase = params.get("phase") or None   # prefill | decode | None
         port = self.endpoint_gateway.register(
             endpoint_job_id=int(params["endpoint_job_id"]),
             slurm_job_id=job.job_id, node=node.node_id,
             model_name=params["model"], model_version=params["version"],
-            bearer_token=params["bearer"], auth="eg")
+            bearer_token=params["bearer"], auth="eg", phase=phase)
         if port is None:
             return lambda: None
         cfg = self.model_cfgs[params["model"]]
         engine = self._engine_factory(cfg, int(params.get("gpus", 1)))
+        if phase is not None:
+            # pool member: specialise the engine and wire the prefill
+            # handoff back into the gateway's two-hop path
+            engine.set_phase(f"{phase}_only")
+            if phase == "prefill":
+                engine.on_handoff = self.web_gateway.on_prefill_handoff
         inst = VLLMInstance(self.loop, engine, node=node.node_id, port=port,
                             bearer_token=params["bearer"],
                             model_name=cfg.name,
-                            load_time=float(params.get("load", 120.0)))
+                            load_time=float(params.get("load", 120.0)),
+                            phase=phase or "unified")
+        inst.lost_sink = self.web_gateway.on_instance_lost
         self.registry[(node.node_id, port)] = inst
         self.instances_spawned.append(inst)
 

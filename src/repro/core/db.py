@@ -86,12 +86,12 @@ class Database:
                    "max_model_len", "slurm_partition")),
             Table("ai_model_endpoint_jobs",
                   ("id", "configuration_id", "slurm_job_id", "submitted_at",
-                   "registered_at", "ready_at"),
+                   "registered_at", "ready_at", "phase"),
                   fks={"configuration_id": ("ai_model_configurations",
                                             "cascade")}),
             Table("ai_model_endpoints",
                   ("id", "endpoint_job_id", "node", "port", "model_name",
-                   "model_version", "bearer_token", "ready_at"),
+                   "model_version", "bearer_token", "ready_at", "phase"),
                   fks={"endpoint_job_id": ("ai_model_endpoint_jobs",
                                            "cascade")}),
         ]:

@@ -38,8 +38,11 @@ import dataclasses
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
-from repro.api.errors import APIStatusError, validation_error
+from repro.api.errors import check_int as _check_int
+from repro.api.errors import check_number as _check_number
+from repro.api.errors import raise_validation as _fail
 from repro.core.db import Database
+from repro.core.disagg import DisaggProfile, DisaggregationSpec
 from repro.core.router import POLICIES, endpoint_key
 from repro.core.simclock import EventLoop
 from repro.core.slurm import JobState, SimSlurm
@@ -48,22 +51,6 @@ from repro.core.slurm import JobState, SimSlurm
 COND_AVAILABLE = "Available"      # ready replicas >= min_replicas
 COND_READY = "Ready"              # fully converged with the current spec
 COND_PROGRESSING = "Progressing"  # reconciler still has work to do
-
-
-def _fail(param: str, message: str):
-    raise APIStatusError(validation_error(param, message))
-
-
-def _check_int(v, param: str, minimum: Optional[int] = None):
-    if type(v) is not int:
-        _fail(param, f"{param} {v!r} must be an int")
-    if minimum is not None and v < minimum:
-        _fail(param, f"{param} {v!r} must be >= {minimum}")
-
-
-def _check_number(v, param: str, minimum: float = 0.0):
-    if not isinstance(v, (int, float)) or isinstance(v, bool) or v < minimum:
-        _fail(param, f"{param} {v!r} must be a number >= {minimum}")
 
 
 @dataclass
@@ -92,6 +79,18 @@ class ModelDeploymentSpec:
     # seconds a draining replica may keep serving in-flight requests
     # before it is force-cancelled
     drain_grace: float = 120.0
+    # rolling-update budgets (k8s Deployment semantics): up to `max_surge`
+    # extra replicas may run above the target while stale ones retire;
+    # `max_unavailable` ready replicas may be missing below the target
+    # during the update (None = legacy behaviour: retire one ready stale
+    # replica per tick, only while a fresh one is ready and the ready
+    # count stays >= min_replicas)
+    max_surge: int = 1
+    max_unavailable: Optional[int] = None
+    # prefill/decode pool split (repro.core.disagg); None = unified.
+    # With a block set, `replicas` is inert — each pool has its own
+    # replica window and the deployment reconciles both.
+    disaggregation: Optional[DisaggregationSpec] = None
 
     def validate(self):
         """Strict field-addressed validation — violations raise a 422
@@ -130,6 +129,19 @@ class ModelDeploymentSpec:
         if self.max_model_len is not None:
             _check_int(self.max_model_len, "max_model_len", minimum=1)
         _check_number(self.drain_grace, "drain_grace")
+        _check_int(self.max_surge, "max_surge", minimum=0)
+        if self.max_unavailable is not None:
+            _check_int(self.max_unavailable, "max_unavailable", minimum=0)
+            if self.max_surge == 0 and self.max_unavailable == 0:
+                _fail("max_surge",
+                      "max_surge and max_unavailable cannot both be 0 "
+                      "(a rolling update could never make progress)")
+        if self.disaggregation is not None:
+            if not isinstance(self.disaggregation, DisaggregationSpec):
+                _fail("disaggregation",
+                      "disaggregation must be a DisaggregationSpec (or its "
+                      "dict manifest form) or null")
+            self.disaggregation.validate()
 
     def template(self) -> tuple:
         """The replica template: fields whose change requires replacing
@@ -150,7 +162,11 @@ class ModelDeploymentSpec:
                 "partition": self.partition,
                 "est_load_time": self.est_load_time,
                 "max_model_len": self.max_model_len,
-                "drain_grace": self.drain_grace}
+                "drain_grace": self.drain_grace,
+                "max_surge": self.max_surge,
+                "max_unavailable": self.max_unavailable,
+                "disaggregation": None if self.disaggregation is None
+                else self.disaggregation.to_dict()}
 
     @classmethod
     def from_dict(cls, d: dict) -> "ModelDeploymentSpec":
@@ -160,6 +176,10 @@ class ModelDeploymentSpec:
             _fail(unknown[0],
                   f"unknown field(s) {unknown} in ModelDeploymentSpec "
                   f"manifest")
+        d = dict(d)
+        if isinstance(d.get("disaggregation"), dict):
+            d["disaggregation"] = DisaggregationSpec.from_dict(
+                d["disaggregation"])
         return cls(**d)
 
 
@@ -249,7 +269,27 @@ class ModelDeployment:
     @property
     def desired_replicas(self) -> int:
         s = self.spec
+        if s.disaggregation is not None:
+            return sum(n for _, n in self.pool_targets())
         return max(s.min_replicas, min(s.max_replicas, s.replicas))
+
+    def pool_targets(self) -> list:
+        """[(phase, desired)] — one (None, n) pool for unified deployments,
+        a (prefill, n)/(decode, m) pair for disaggregated ones."""
+        dis = self.spec.disaggregation
+        if dis is None:
+            s = self.spec
+            return [(None, max(s.min_replicas,
+                               min(s.max_replicas, s.replicas)))]
+        return [("prefill", dis.desired("prefill")),
+                ("decode", dis.desired("decode"))]
+
+    def pool_floor(self, phase) -> int:
+        """Ready-replica floor during scale-down / rolling updates."""
+        dis = self.spec.disaggregation
+        if dis is None or phase is None:
+            return self.spec.min_replicas
+        return dis.window(phase)[0]
 
     def to_dict(self) -> dict:
         return {"name": self.name, "generation": self.generation,
@@ -376,23 +416,41 @@ class Reconciler:
         self._emit("DELETED", dep)
         return True
 
-    def patch_replicas(self, config_id: int, delta: int,
-                       rule: str = "") -> Optional[tuple]:
+    def patch_replicas(self, config_id: int, delta: int, rule: str = "",
+                       pool: Optional[str] = None) -> Optional[tuple]:
         """Autoscaler actuation: patch spec.replicas by ``delta``, clamped
         to the deployment's [min_replicas, max_replicas] window.  Returns
         (old, new) for a managed config — possibly equal when clamped —
         or None when the config is not declaratively managed (the webhook
-        then falls back to the legacy DB mutation)."""
+        then falls back to the legacy DB mutation).
+
+        For disaggregated deployments the patch is pool-addressed: the
+        firing rule names ``pool`` (prefill/decode) and the clamp uses that
+        pool's own replica window, so the two pools scale independently.
+        A pool-less alert (the generic queue rules) grows the decode pool —
+        the engine queue it observes is dominated by decode residency."""
         dep = self._by_config.get(config_id)
         if dep is None:
             return None
-        old = dep.spec.replicas
-        new = max(dep.spec.min_replicas,
-                  min(dep.spec.max_replicas, old + delta))
+        dis = dep.spec.disaggregation
+        if dis is not None:
+            pool = pool or "decode"
+            attr = f"{pool}_replicas"
+            old = getattr(dis, attr)
+            lo, hi = dis.window(pool)
+            new = max(lo, min(hi, old + delta))
+            if new != old:
+                setattr(dis, attr, new)
+        else:
+            old = dep.spec.replicas
+            new = max(dep.spec.min_replicas,
+                      min(dep.spec.max_replicas, old + delta))
+            if new != old:
+                dep.spec.replicas = new
         if new != old:
-            dep.spec.replicas = new
             dep.generation += 1
-            self._emit("SCALED", dep, extra={"rule": rule, "delta": delta})
+            self._emit("SCALED", dep, extra={"rule": rule, "delta": delta,
+                                             **({"pool": pool} if dis else {})})
             self._update_status(dep, dep.desired_replicas, self.loop.now)
         return old, new
 
@@ -438,10 +496,23 @@ class Reconciler:
         return self.registry.get(endpoint_key(eps[0]))
 
     def _wire_gateway(self, dep: ModelDeployment):
-        """Push per-deployment routing/queue policy into the Web Gateway."""
+        """Push per-deployment routing/queue/disaggregation policy into the
+        Web Gateway."""
         if self.gateway is None:
             return
-        self.gateway.set_model_policy(dep.name, dep.spec.routing_policy)
+        dis = dep.spec.disaggregation
+        if dis is not None:
+            # phase-aware two-hop routing; the spec's routing_policy (if
+            # any) becomes the within-pool endpoint choice
+            self.gateway.set_model_policy(
+                dep.name, "disaggregated",
+                inner=dep.spec.routing_policy or "least_loaded")
+            self.gateway.set_model_disaggregation(dep.name, DisaggProfile(
+                transfer_bandwidth=dis.transfer_bandwidth,
+                max_retries=dis.max_retries))
+        else:
+            self.gateway.set_model_policy(dep.name, dep.spec.routing_policy)
+            self.gateway.set_model_disaggregation(dep.name, None)
         self.gateway.set_model_queue(dep.name, dep.spec.queue_capacity,
                                      dep.spec.queue_ttl)
 
@@ -451,16 +522,23 @@ class Reconciler:
         if inst is not None:
             inst.drain()
 
+    def _orphans(self, dep: ModelDeployment, jobs: list) -> list:
+        """Jobs whose phase belongs to no current pool — left behind by a
+        unified<->disaggregated spec transition; they are retired like any
+        other scale-down victim."""
+        target_phases = {ph for ph, _ in dep.pool_targets()}
+        return [j for j in jobs if j.get("phase") not in target_phases]
+
     def _reconcile_one(self, dep: ModelDeployment, now: float):
         cfg = self.db["ai_model_configurations"].get(dep.config_id)
         if cfg is None:        # deleted out from under us
             return
-        desired = dep.desired_replicas
+        desired_total = dep.desired_replicas
         # keep the legacy desired-state column in sync: the spec is the
         # source of truth, the DB row is the executor's actuation record
-        if cfg["instances"] != desired:
+        if cfg["instances"] != desired_total:
             self.db["ai_model_configurations"].update(
-                cfg["id"], instances=desired)
+                cfg["id"], instances=desired_total)
 
         live = self._jobs(dep)
         known = {j["id"] for j in live}
@@ -478,34 +556,69 @@ class Reconciler:
                 dep._draining.pop(job["id"], None)
 
         live = self._jobs(dep)     # re-read after cancels
-        active = [j for j in live if j["id"] not in dep._draining]
+        # phase-pool transitions: retire jobs belonging to no current pool
+        for job in self._orphans(dep, [j for j in live
+                                       if j["id"] not in dep._draining]):
+            if job["ready_at"] is None:
+                self.slurm.scancel(job["slurm_job_id"])
+            else:
+                self._start_drain(dep, job, now)
+        live = self._jobs(dep)
+
+        submitted = False          # one submission per tick, the paper's
+        for phase, desired in dep.pool_targets():  # Job-Worker pacing
+            submitted |= self._reconcile_pool(
+                dep, cfg, phase, desired, live, now,
+                allow_submit=not submitted)
+
+        self._update_status(dep, desired_total, now)
+
+    def _reconcile_pool(self, dep: ModelDeployment, cfg: dict,
+                        phase: Optional[str], desired: int, live: list,
+                        now: float, allow_submit: bool) -> bool:
+        """Converge one phase pool (the whole deployment for unified
+        specs).  Returns True when a job submission was spent."""
+        spec = dep.spec
+        pool = [j for j in live if j.get("phase") == phase]
+        active = [j for j in pool if j["id"] not in dep._draining]
         stale = [j for j in active
                  if dep._job_template.get(j["id"], 0)
                  < dep.template_generation]
         fresh = [j for j in active if j not in stale]
 
-        # 2. scale up / rolling surge — one submission per tick, the
-        # paper's Job-Worker pacing (avoids port races)
-        surge = 1 if stale else 0
+        # 2. scale up / rolling surge: during an update up to `max_surge`
+        # replicas may run above the pool target
+        surge = spec.max_surge if stale else 0
         if len(fresh) < desired and len(active) < desired + surge:
-            row = self.job_worker.submit_one(
-                cfg, now, priority=dep.spec.priority_class)
-            dep._job_template[row["id"]] = dep.template_generation
+            if allow_submit:
+                row = self.job_worker.submit_one(
+                    cfg, now, priority=spec.priority_class, phase=phase)
+                dep._job_template[row["id"]] = dep.template_generation
+                return True
         elif stale:
             # 3. rolling update: stale replicas that never became ready are
-            # not serving — cancel outright; retire at most one ready stale
-            # replica per tick, and only while a fresh replica is ready and
-            # the ready count stays >= min_replicas
+            # not serving — cancel outright; ready stale replicas retire
+            # within the availability budget
             for job in [j for j in stale if j["ready_at"] is None]:
                 self.slurm.scancel(job["slurm_job_id"])
             ready_stale = sorted((j for j in stale
                                   if j["ready_at"] is not None),
                                  key=lambda j: j["submitted_at"] or 0)
             ready_fresh = [j for j in fresh if j["ready_at"] is not None]
-            floor = min(dep.spec.min_replicas, desired)
-            if ready_stale and ready_fresh \
-                    and len(ready_stale) + len(ready_fresh) - 1 >= floor:
-                self._start_drain(dep, ready_stale[0], now)
+            floor = min(dep.pool_floor(phase), desired)
+            ready_total = len(ready_stale) + len(ready_fresh)
+            if spec.max_unavailable is None:
+                # legacy budget: one retirement per tick, only while a
+                # fresh replica is ready and ready count stays >= floor
+                if ready_stale and ready_fresh and ready_total - 1 >= floor:
+                    self._start_drain(dep, ready_stale[0], now)
+            else:
+                # k8s budget: ready replicas may drop `max_unavailable`
+                # below the target (never below the pool floor), with no
+                # fresh-ready precondition — that is what the knob buys
+                keep = max(floor, desired - spec.max_unavailable)
+                for job in ready_stale[:max(0, ready_total - keep)]:
+                    self._start_drain(dep, job, now)
         elif len(active) > desired:
             # 4. scale down: not-yet-ready victims first (nothing to
             # drain), then the newest ready replicas — which DRAIN instead
@@ -519,8 +632,7 @@ class Reconciler:
                     self.slurm.scancel(job["slurm_job_id"])
                 else:
                     self._start_drain(dep, job, now)
-
-        self._update_status(dep, desired, now)
+        return False
 
     # ------------------------------------------------------------------
     def _update_status(self, dep: ModelDeployment, desired: int, now: float):
@@ -541,8 +653,15 @@ class Reconciler:
                                 - st.pending_replicas)
         st.draining_replicas = len(draining)
 
+        orphans = self._orphans(dep, active)
+        pools_converged = all(
+            sum(1 for j in active if j.get("phase") == ph) == n
+            and sum(1 for j in active
+                    if j.get("phase") == ph and j["ready_at"] is not None) == n
+            for ph, n in dep.pool_targets())
         converged = (len(active) == desired
                      and st.ready_replicas == desired
+                     and pools_converged and not orphans
                      and not stale and not draining)
         rolling = bool(stale) or any(
             dep._job_template.get(j["id"], 0) < dep.template_generation

@@ -18,13 +18,19 @@ from repro.engine.request import Request, RequestStatus
 class VLLMInstance:
     def __init__(self, loop: EventLoop, engine: LLMEngine, *, node: str,
                  port: int, bearer_token: str, model_name: str,
-                 load_time: float = 120.0):
+                 load_time: float = 120.0, phase: str = "unified"):
         self.loop = loop
         self.engine = engine
         self.node = node
         self.port = port
         self.bearer_token = bearer_token
         self.model_name = model_name
+        self.phase = phase          # unified | prefill | decode pool member
+        # fn(req) -> bool, set by the control plane: offered every in-flight
+        # request when this instance dies; True = the gateway took the
+        # request over (disaggregated transparent retry) and the stream
+        # must NOT be failed here
+        self.lost_sink = None
         self.alive = True
         self.loaded = False
         # draining: still alive and serving in-flight work, but the Web
@@ -47,18 +53,25 @@ class VLLMInstance:
         self.draining = True
 
     def kill(self):
-        """Slurm job cancelled / node failed: in-flight requests are lost."""
+        """Slurm job cancelled / node failed: in-flight requests are lost —
+        unless the gateway's `lost_sink` takes one over (disaggregated
+        transparent retry), in which case its stream stays open."""
         self.alive = False
         self.loaded = False
         for seq in list(self.engine.scheduler.running):
             self.engine.scheduler.finish_seq(seq, RequestStatus.FAILED)
             self.engine.metrics.requests_failed += 1
-            self._fail_stream(seq.req)
+            if not self._offer_lost(seq.req):
+                self._fail_stream(seq.req)
         for req in list(self.engine.scheduler.waiting):
             req.status = RequestStatus.FAILED
             self.engine.metrics.requests_failed += 1
-            self._fail_stream(req)
+            if not self._offer_lost(req):
+                self._fail_stream(req)
         self.engine.scheduler.waiting.clear()
+
+    def _offer_lost(self, req: Request) -> bool:
+        return self.lost_sink is not None and self.lost_sink(req)
 
     def _fail_stream(self, req: Request):
         """Deliver a terminal 462 error event on the request's TokenStream

@@ -62,6 +62,7 @@ class MetricsGateway:
                 "labels": {
                     "model": ep["model_name"],
                     "model_version": str(ep["model_version"]),
+                    "phase": ep.get("phase") or "unified",
                     "endpoint_job_id": str(ep["endpoint_job_id"]),
                     "slurm_job_id": str(job["slurm_job_id"]) if job else "",
                     "__bearer__": ep["bearer_token"],
@@ -115,6 +116,22 @@ class MetricsGateway:
                     "running_total": sum(s["num_running"] for s in snaps),
                     "gateway_queued": queued,
                 }
+                # disaggregated pools: per-phase depths so the autoscaler's
+                # pool-addressed rules can grow prefill and decode capacity
+                # independently (keys absent for unified deployments)
+                for pool in ("prefill", "decode"):
+                    phs = [s for s in snaps
+                           if s.get("phase") == f"{pool}_only"]
+                    if not phs:
+                        continue
+                    agg[f"queue_time_max_{pool}"] = max(s["queue_time"]
+                                                        for s in phs)
+                    agg[f"waiting_{pool}"] = sum(s["num_waiting"]
+                                                 for s in phs)
+                    agg[f"running_{pool}"] = sum(s["num_running"]
+                                                 for s in phs)
+                    agg[f"kv_util_{pool}"] = (sum(s["kv_utilization"]
+                                                  for s in phs) / len(phs))
             elif queued:
                 # zero live instances but queued demand: emit a partial
                 # sample (no kv/running keys — series() skips them) so the
@@ -137,7 +154,10 @@ class MetricsGateway:
     # -- Grafana contact-point webhook --------------------------------------
     def grafana_webhook(self, payload: dict) -> int:
         """POST with a custom JSON payload from a firing alert rule.
-        {"config_id": int, "delta": +1|-1, "rule": str}
+        {"config_id": int, "delta": +1|-1, "rule": str, "pool": str|None}
+        (``pool`` names the prefill/decode pool for the per-phase rules of
+        disaggregated deployments; the patch then targets that pool's own
+        replica window.)
 
         Declaratively managed configs (`spec_patcher` returns non-None):
         the alert becomes a replica-count patch on the ModelDeploymentSpec,
@@ -151,7 +171,8 @@ class MetricsGateway:
         if self.spec_patcher is not None:
             patched = self.spec_patcher(payload["config_id"],
                                         payload["delta"],
-                                        payload.get("rule", ""))
+                                        payload.get("rule", ""),
+                                        payload.get("pool"))
             if patched is not None:
                 old, new = patched
                 if new != old:

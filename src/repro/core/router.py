@@ -69,6 +69,9 @@ class RoutingPolicy:
     """
 
     name = "abstract"
+    # policies that consume Metrics-Gateway scrape snapshots get the
+    # gateway's `load_fn` injected by `make_policy`
+    wants_load_fn = False
 
     def __init__(self):
         self.picks: dict[tuple, int] = {}
@@ -113,6 +116,7 @@ class LeastLoaded(RoutingPolicy):
     """
 
     name = "least_loaded"
+    wants_load_fn = True
 
     def __init__(self, load_fn: Optional[Callable[[tuple], dict]] = None):
         super().__init__()
@@ -225,6 +229,7 @@ class PrefixAware(RoutingPolicy):
     """
 
     name = "prefix_aware"
+    wants_load_fn = True
 
     def __init__(self, prefix_tokens: int = 32, max_entries: int = 4096,
                  load_fn: Optional[Callable[[tuple], dict]] = None):
@@ -286,7 +291,7 @@ def make_policy(name: str,
     except KeyError:
         raise ValueError(f"unknown routing policy {name!r}; "
                          f"choose from {sorted(POLICIES)}") from None
-    if cls in (LeastLoaded, PrefixAware):
+    if cls.wants_load_fn:
         kw.setdefault("load_fn", load_fn)
     return cls(**kw)
 

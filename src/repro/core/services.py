@@ -60,7 +60,7 @@ class EndpointGateway:
 
     def register(self, *, endpoint_job_id: int, slurm_job_id: int, node: str,
                  model_name: str, model_version: str, bearer_token: str,
-                 auth: str) -> Optional[int]:
+                 auth: str, phase: Optional[str] = None) -> Optional[int]:
         """Returns the assigned port (the curl response) or None."""
         if auth != self.auth_token:
             return None
@@ -75,7 +75,7 @@ class EndpointGateway:
         self.db["ai_model_endpoints"].insert(
             self.db, endpoint_job_id=endpoint_job_id, node=node, port=port,
             model_name=model_name, model_version=model_version,
-            bearer_token=bearer_token, ready_at=None)
+            bearer_token=bearer_token, ready_at=None, phase=phase)
         self.db["ai_model_endpoint_jobs"].update(
             endpoint_job_id, registered_at=self.loop.now)
         return port
@@ -117,14 +117,17 @@ class JobWorker:
             elif len(live) > desired:
                 self._scale_down(cfg, live, len(live) - desired)
 
-    def submit_one(self, cfg: dict, now: float, priority: int = 0) -> dict:
+    def submit_one(self, cfg: dict, now: float, priority: int = 0,
+                   phase: Optional[str] = None) -> dict:
         """Submit one endpoint job for `cfg`; returns the job row (the
-        Reconciler records the template generation against its id)."""
+        Reconciler records the template generation against its id).
+        ``phase`` tags the job as a prefill/decode pool member
+        (disaggregated deployments); None = unified."""
         bearer = f"tok-{next(self._tok):08x}"
         # row is created first so the job script can reference its id
         row = self.db["ai_model_endpoint_jobs"].insert(
             self.db, configuration_id=cfg["id"], slurm_job_id=None,
-            submitted_at=now, registered_at=None, ready_at=None)
+            submitted_at=now, registered_at=None, ready_at=None, phase=phase)
         param_string = ",".join([
             f"config_id={cfg['id']}",
             f"endpoint_job_id={row['id']}",
@@ -135,6 +138,7 @@ class JobWorker:
             f"partition={cfg['slurm_partition']}",
             f"load={cfg['est_load_time']}",
             f"priority={priority}",
+            f"phase={phase or ''}",
             f"bearer={bearer}",
         ])
         slurm_job_id = self.submit.submit(param_string)

@@ -34,6 +34,7 @@ from repro.api.errors import APIError, error_for_status, validation_error
 from repro.api.streaming import TokenStream
 from repro.config import ServiceConfig
 from repro.core.db import Database
+from repro.core.disagg import DisaggProfile
 from repro.core.router import GatewayQueue, endpoint_key, make_policy
 from repro.core.simclock import EventLoop
 from repro.engine.request import Request, RequestStatus
@@ -64,7 +65,10 @@ class GatewayStats:
     requests: int = 0
     rejected_auth: int = 0
     rejected_no_endpoint: int = 0
+    rejected_admission: int = 0   # est. service time > queue TTL (461)
     forwarded: int = 0
+    handoffs: int = 0             # prefill->decode hops orchestrated
+    disagg_retries: int = 0       # transparent re-runs after instance loss
     db_trips: int = 0
     cache_hits: int = 0
     per_status: dict = field(default_factory=dict)
@@ -74,15 +78,21 @@ class WebGateway:
     def __init__(self, db: Database, loop: EventLoop, registry: dict,
                  latency: GatewayLatency = None, auth_cache_ttl: float = 60.0,
                  services: Optional[ServiceConfig] = None,
-                 load_fn: Optional[Callable[[tuple], dict]] = None):
+                 load_fn: Optional[Callable[[tuple], dict]] = None,
+                 service_estimator: Optional[Callable] = None):
         self.db = db
         self.loop = loop
         self.registry = registry                  # (node, port) -> instance
         self.lat = latency or GatewayLatency()
         self.auth_cache_ttl = auth_cache_ttl
         self.services = services or ServiceConfig()
+        # fn(model_name, req) -> estimated service seconds | None; feeds
+        # queue admission control (ServiceConfig.admission_control)
+        self.service_estimator = service_estimator
         self._auth_cache: dict[str, tuple] = {}   # api_key -> (tenant, expiry)
         self.stats = GatewayStats()
+        # per-model disaggregation profiles (two-hop prefill/decode routing)
+        self._disagg: dict[str, DisaggProfile] = {}
         svc = self.services
         self._load_fn = load_fn
         self.router = make_policy(
@@ -125,6 +135,17 @@ class WebGateway:
         """Per-deployment gateway-queue knobs (None, None clears)."""
         self.queue.configure_model(model_name, capacity, ttl)
         self._ensure_queue_tick()
+
+    def set_model_disaggregation(self, model_name: str,
+                                 profile: Optional[DisaggProfile]):
+        """Enable (or, with None, disable) two-hop prefill/decode routing
+        for one model: KV transfer cost + transparent instance-loss retry
+        knobs.  The phase-aware endpoint choice itself comes from the
+        model's `disaggregated` routing policy (set_model_policy)."""
+        if profile is None:
+            self._disagg.pop(model_name, None)
+        else:
+            self._disagg[model_name] = profile
 
     def router_for(self, model_name: str):
         return self._model_routers.get(model_name, self.router)
@@ -208,6 +229,10 @@ class WebGateway:
         self.stats.db_trips += 1
         status = self._route_and_forward(model_name, req, t_auth=t_auth)
         if status in (MODEL_NOT_READY, INSTANCE_UNREACHABLE):
+            admission_err = self._admission_check(model_name, req)
+            if admission_err is not None:
+                self.stats.rejected_admission += 1
+                return self._reject(MODEL_NOT_READY, stream, admission_err)
             if self.queue.offer(
                     req, model_name, now,
                     dispatch=lambda r: self._route_and_forward(model_name, r)):
@@ -222,6 +247,26 @@ class WebGateway:
                 ) -> tuple[int, TokenStream, APIError]:
         stream.fail(err)
         return self._status(status), stream, err
+
+    def _admission_check(self, model_name: str,
+                         req: Request) -> Optional[APIError]:
+        """Queue admission by estimated service time: a request whose
+        roofline-estimated service time exceeds the queue TTL it would be
+        held under cannot be served within its budget — answer 461 now
+        (with the TTL as the retry hint) instead of parking it."""
+        if not self.services.admission_control \
+                or self.service_estimator is None:
+            return None
+        cap, ttl = self.queue.limits_for(model_name)
+        if cap <= 0:                    # no queue -> nothing to admit into
+            return None
+        est = self.service_estimator(model_name, req)
+        if est is None or est <= ttl:
+            return None
+        return error_for_status(
+            MODEL_NOT_READY, retry_after=ttl,
+            message=f"Admission rejected: estimated service time "
+                    f"{est:.1f}s exceeds the {ttl:.0f}s queue TTL.")
 
     def _route_and_forward(self, model_name: str, req: Request,
                            t_auth: Optional[float] = None) -> int:
@@ -283,6 +328,68 @@ class WebGateway:
 
         self.loop.call_after(delay, submit)
         self.stats.forwarded += 1
+
+    # -- disaggregated prefill/decode (repro.core.disagg) --------------------
+    def on_prefill_handoff(self, req: Request, handoff, now: float = None):
+        """Wired as the prefill-only engines' ``on_handoff``: the prefill
+        hop produced the first token and exported its sealed KV blocks.
+        Charge the KV transfer against the model's bandwidth knob, then
+        dispatch the decode hop — the model's `DisaggregatedRouter` sees
+        the attached handoff and targets the decode pool."""
+        prof = self._disagg.get(req.model) or DisaggProfile(
+            transfer_bandwidth=self.services.kv_transfer_bandwidth)
+        delay = prof.transfer_time(handoff)
+        req.metrics.kv_transfer_time += delay
+        self.stats.handoffs += 1
+        # the prefill endpoint's router slot is free as of now; the decode
+        # hop rebinds the stream (new dispatch epoch) when it forwards
+        TokenStream.ensure(req).release_dispatch()
+        model = req.model
+        self.loop.call_after(delay, lambda: self._redispatch(model, req))
+
+    def on_instance_lost(self, req: Request) -> bool:
+        """Wired as every instance's ``lost_sink``: an instance died with
+        this request in flight.  For disaggregation-managed models the
+        gateway re-runs the request from the prefill hop (the KV died with
+        the instance) instead of failing the stream — budgeted by the
+        profile's ``max_retries``; the gateway queue + reconciler cover the
+        window until a replacement pool member is up.  Returns True when
+        the request was taken over."""
+        prof = self._disagg.get(req.model)
+        if prof is None or req.disagg_retries >= prof.max_retries:
+            return False
+        req.disagg_retries += 1
+        req.handoff = None              # the prefilled KV is gone
+        req.output_tokens = []          # restart-from-scratch (RECOMPUTE)
+        # full restart: the retry's tokens are THE completion — drop the
+        # pre-crash events from the stream and let the engine re-stamp
+        # first-token time, so neither the terminal response nor the
+        # engine-side ttft/e2el mixes the two runs
+        req.metrics.first_token_time = None
+        TokenStream.ensure(req).restart()
+        self.stats.disagg_retries += 1
+        model = req.model
+        # deferred: kill() is still iterating the dying engine's queues
+        self.loop.call_after(0.0, lambda: self._redispatch(model, req))
+        return True
+
+    def _redispatch(self, model_name: str, req: Request):
+        """Dispatch a follow-up hop (decode hop / transparent retry).  No
+        HTTP response is held open for these, so a terminal failure must be
+        delivered as an error event on the stream; MODEL_NOT_READY /
+        INSTANCE_UNREACHABLE re-enqueue into the gateway queue first."""
+        status = self._route_and_forward(model_name, req)
+        if status == OK:
+            return
+        if self.queue.offer(
+                req, model_name, self.loop.now,
+                dispatch=lambda r: self._route_and_forward(model_name, r)):
+            return
+        req.status = RequestStatus.FAILED
+        self.stats.rejected_no_endpoint += 1
+        self._status(status)
+        TokenStream.ensure(req).fail(error_for_status(
+            status, retry_after=self._retry_after(model_name)))
 
     # -- router-side queue --------------------------------------------------
     def notify_ready(self, model_name: str):

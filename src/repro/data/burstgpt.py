@@ -73,6 +73,43 @@ def concurrent_burst(n: int, seed: int = 0, vocab: int = 32000,
     return w
 
 
+def mixed_burst(n: int, seed: int = 0, vocab: int = 32000,
+                long_fraction: float = 0.25,
+                chat_output_mean: float = 300.0,
+                long_output_mean: float = 16.0,
+                shared_fraction: float = 0.9) -> Workload:
+    """Mixed-length workload for the disaggregation benchmark: long-prompt/
+    short-output document requests (summarisation / RAG-context shape)
+    interleaved with short-prompt/long-output chat turns — the two ends of
+    the BurstGPT length distribution that a unified instance serves in the
+    same mixed step.  Each class shares a class-level master prefix
+    (template / repeated context fill), like `concurrent_burst`.
+
+    All-at-once arrivals (the paper's N-concurrent closed benchmark)."""
+    rng = np.random.default_rng(seed)
+    masters = {"long": rng.integers(1, vocab, size=8192).tolist(),
+               "chat": rng.integers(1, vocab, size=2048).tolist()}
+    w = Workload()
+    for i in range(n):
+        if rng.random() < long_fraction:
+            in_len = int(np.clip(rng.lognormal(np.log(3500), 0.5),
+                                 1024, 8192))
+            out_len = max(1, int(rng.gamma(2.0, long_output_mean / 2.0)))
+            master = masters["long"]
+        else:
+            in_len = int(np.clip(rng.lognormal(np.log(300), 0.8), 32, 1024))
+            out_len = max(1, int(rng.gamma(2.0, chat_output_mean / 2.0)))
+            master = masters["chat"]
+        n_shared = int(in_len * shared_fraction)
+        tail = rng.integers(1, vocab, size=in_len - n_shared).tolist()
+        w.requests.append(Request(
+            prompt_tokens=master[:n_shared] + tail,
+            sampling=SamplingParams(target_output_len=out_len,
+                                    max_new_tokens=out_len, seed=seed)))
+        w.arrivals.append(0.0)
+    return w
+
+
 def bursty_poisson(rate: float, duration: float, seed: int = 0,
                    vocab: int = 32000, cv: float = 2.0) -> Workload:
     """Open-loop bursty arrivals (Gamma renewal process, CV>1 = bursts).

@@ -13,10 +13,11 @@ from typing import Optional
 
 import numpy as np
 
-from repro.engine.kv_cache import BlockAllocator
+from repro.engine.kv_cache import BlockAllocator, export_handoff, \
+    import_handoff
 from repro.engine.metrics import EngineMetrics, snapshot
 from repro.engine.request import Request, RequestStatus
-from repro.engine.scheduler import Scheduler
+from repro.engine.scheduler import PHASE_MODES, Scheduler
 
 
 @dataclass
@@ -31,20 +32,41 @@ class LLMEngine:
     def __init__(self, cfg, executor, num_blocks: int = 4096,
                  block_size: int = 32, max_num_seqs: int = 64,
                  max_prefill_tokens: int = 2048, max_model_len: int = 8192,
-                 enable_prefix_caching: bool = True):
+                 enable_prefix_caching: bool = True,
+                 phase_mode: str = "unified"):
         self.cfg = cfg
         self.executor = executor
         self.allocator = BlockAllocator(
             num_blocks, block_size, enable_prefix_caching=enable_prefix_caching)
         self.scheduler = Scheduler(self.allocator, max_num_seqs=max_num_seqs,
                                    max_prefill_tokens=max_prefill_tokens,
-                                   max_model_len=max_model_len)
+                                   max_model_len=max_model_len,
+                                   phase_mode=phase_mode)
+        self.phase_mode = phase_mode
+        # disaggregation hook: fn(req, KVHandoff, now) fired by a
+        # prefill-only engine once a request's first token is out and its
+        # sealed blocks are exported (wired to the gateway's two-hop path)
+        self.on_handoff = None
         self.metrics = EngineMetrics()
         self._rng = np.random.default_rng(0)
+
+    def set_phase(self, phase_mode: str):
+        """Specialise this engine to one serving phase (disaggregated
+        pools); engines default to the paper's unified behaviour."""
+        assert phase_mode in PHASE_MODES, phase_mode
+        self.phase_mode = phase_mode
+        self.scheduler.phase_mode = phase_mode
 
     # ------------------------------------------------------------------
     def add_request(self, req: Request, now: float):
         req.sampling.validate()
+        if req.handoff is not None:
+            # decode hop: re-materialise the prefill pool's sealed blocks
+            # so admission's match_prefix reattaches them instead of
+            # recomputing the whole prompt
+            n = import_handoff(self.allocator, req.handoff)
+            self.metrics.handoffs_imported += 1
+            self.metrics.handoff_blocks_imported += n
         self.scheduler.add_request(req, now)
 
     def has_work(self) -> bool:
@@ -137,9 +159,34 @@ class LLMEngine:
         for i, (seq, (start, end)) in enumerate(out.prefills):
             self.metrics.tokens_prefilled += end - start
             tokens += end - start
-            if seq.prompt_done:
+            if seq.prompt_done and not seq.req.output_tokens:
                 row = pre_logits[i] if pre_logits else None
                 tok = self._sample(seq.req, row)
-                finished += int(self._emit(seq, tok, t_done))
+                done = self._emit(seq, tok, t_done)
+                finished += int(done)
+                if not done and self.phase_mode == "prefill_only":
+                    # first token is out; hand the sealed prompt KV to the
+                    # decode pool instead of decoding here
+                    self._export_handoff(seq, t_done)
+            # a resumed decode hop reaching prompt_done (tail recompute)
+            # already carries its first token — no sample, no handoff; the
+            # next step decodes it like any running sequence
 
         return StepReport("mixed", elapsed, tokens=tokens, finished=finished)
+
+    # -- disaggregation (repro.core.disagg) ------------------------------
+    def _export_handoff(self, seq, now: float):
+        req = seq.req
+        cost = getattr(self.executor, "cost", None)
+        bpt = getattr(cost, "kv_bytes_per_token", 0.0) if cost else 0.0
+        handoff = export_handoff(req.prompt_tokens,
+                                 self.allocator.block_size,
+                                 first_token=req.output_tokens[-1],
+                                 kv_bytes_per_token=bpt)
+        # release the slot and blocks: sealed blocks stay warm in the
+        # evictable pool, so shared prefixes keep hitting on this instance
+        self.scheduler.finish_seq(seq, status=RequestStatus.MIGRATING)
+        req.handoff = handoff
+        self.metrics.handoffs_exported += 1
+        if self.on_handoff is not None:
+            self.on_handoff(req, handoff, now)

@@ -117,6 +117,90 @@ def chain_hash(prev: int, tokens: tuple) -> int:
     return hash((prev, tokens))
 
 
+@dataclass
+class KVHandoff:
+    """Serialisable description of a prefilled request's sealed KV blocks,
+    produced by a prefill-only engine and imported by a decode-only engine
+    (disaggregated serving, repro.core.disagg).
+
+    The wire form carries content hashes, not tensors: the simulator's KV
+    blocks are content-addressed (`BlockAllocator.prefix_index`), so the
+    receiver re-materialises the blocks by sealing empty ones under the
+    same chain hashes and lets `SequenceKV.match_prefix` reattach them.
+    ``kv_bytes`` is the physical transfer size a real system would move
+    (roofline `kv_bytes_per_token` x covered tokens); the gateway charges
+    it against the deployment's transfer-bandwidth knob.  The final prompt
+    tokens past the last complete block (< block_size + 1 of them) are
+    recomputed on the decode side, like a real partial-block handoff.
+    """
+    block_hashes: list            # chain hash per complete prompt block
+    block_size: int
+    tokens_covered: int           # == len(block_hashes) * block_size
+    prompt_len: int
+    first_token: int              # sampled on the prefill instance (TTFT)
+    kv_bytes: float = 0.0
+
+    def to_dict(self) -> dict:
+        return {"block_hashes": list(self.block_hashes),
+                "block_size": self.block_size,
+                "tokens_covered": self.tokens_covered,
+                "prompt_len": self.prompt_len,
+                "first_token": self.first_token,
+                "kv_bytes": self.kv_bytes}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "KVHandoff":
+        return cls(block_hashes=list(d["block_hashes"]),
+                   block_size=d["block_size"],
+                   tokens_covered=d["tokens_covered"],
+                   prompt_len=d["prompt_len"],
+                   first_token=d["first_token"],
+                   kv_bytes=d.get("kv_bytes", 0.0))
+
+
+def export_handoff(tokens: list, block_size: int, first_token: int,
+                   kv_bytes_per_token: float = 0.0) -> KVHandoff:
+    """Build the handoff for a fully prefilled prompt: chain hashes of every
+    complete block `match_prefix` could reuse (the final prompt token is
+    never covered, mirroring match_prefix's contract)."""
+    n_blocks = (len(tokens) - 1) // block_size
+    hashes = []
+    h = 0
+    for i in range(n_blocks):
+        h = chain_hash(h, tuple(tokens[i * block_size:(i + 1) * block_size]))
+        hashes.append(h)
+    covered = n_blocks * block_size
+    return KVHandoff(block_hashes=hashes, block_size=block_size,
+                     tokens_covered=covered, prompt_len=len(tokens),
+                     first_token=first_token,
+                     kv_bytes=float(covered) * kv_bytes_per_token)
+
+
+def import_handoff(alloc: BlockAllocator, handoff: KVHandoff) -> int:
+    """Materialise a handoff into `alloc`'s content-addressed index so the
+    next `match_prefix` of the prompt hits.  Blocks already present (an
+    earlier request with the same prefix) are deduplicated.  Imports only
+    consume truly free blocks — never the warm evictable pool (evicting
+    resident prefix cache for an incoming transfer would trade a certain
+    hit for a speculative one), and running out stops the import early:
+    the uncovered suffix is simply recomputed.  Returns the number of
+    blocks newly imported."""
+    if not alloc.enable_prefix_caching \
+            or handoff.block_size != alloc.block_size:
+        return 0
+    imported = 0
+    for h in handoff.block_hashes:
+        if alloc.lookup(h) is not None:
+            continue                    # transfer dedup: receiver has it
+        if not alloc.free_list:
+            break
+        idx = alloc.allocate()          # pops the free list (checked above)
+        alloc.seal(idx, h)
+        alloc.free(idx)                 # sealed + ref 0 -> evictable pool
+        imported += 1
+    return imported
+
+
 class SequenceKV:
     """Block table for one sequence."""
 

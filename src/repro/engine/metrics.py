@@ -17,6 +17,10 @@ class EngineMetrics:
     requests_failed: int = 0
     preemptions: int = 0
     busy_time: float = 0.0          # model execution seconds
+    # disaggregated serving: prefill->decode KV handoffs through this engine
+    handoffs_exported: int = 0
+    handoffs_imported: int = 0
+    handoff_blocks_imported: int = 0
     finished: list = field(default_factory=list)  # (req metrics, out_len)
 
     def record_finish(self, req):
@@ -30,6 +34,7 @@ def snapshot(engine, now: float) -> dict:
     m = engine.metrics
     return {
         "time": now,
+        "phase": engine.phase_mode,
         "num_waiting": sched.num_waiting(),
         "num_running": sched.num_running(),
         "kv_utilization": sched.kv_utilization(),
@@ -39,4 +44,6 @@ def snapshot(engine, now: float) -> dict:
         "requests_finished_total": m.requests_finished,
         "preemptions_total": m.preemptions,
         "busy_time_total": m.busy_time,
+        "handoffs_exported_total": m.handoffs_exported,
+        "handoffs_imported_total": m.handoffs_imported,
     }

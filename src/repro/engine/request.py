@@ -17,6 +17,7 @@ class RequestStatus(enum.Enum):
     WAITING = "waiting"        # FCFS queue (vLLM admission)
     RUNNING = "running"        # holds decode slot + KV blocks
     PREEMPTED = "preempted"    # evicted under memory pressure, re-queued
+    MIGRATING = "migrating"    # prefill done, KV handoff to the decode pool
     FINISHED = "finished"
     FAILED = "failed"
 
@@ -80,11 +81,17 @@ class SamplingParams:
 
 @dataclass
 class RequestMetrics:
-    arrival_time: float = 0.0          # enqueue at the engine
+    arrival_time: float = 0.0          # enqueue at the FIRST engine
     gateway_time: float = 0.0          # arrival at the web gateway
+    # enqueue at the CURRENT engine: a disaggregated request is enqueued
+    # twice (prefill hop, decode hop); the scheduler's queue-time signal
+    # must measure the local wait, while ttft/e2el keep the original arrival
+    last_enqueue_time: Optional[float] = None
     first_scheduled_time: Optional[float] = None
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
+    # seconds spent moving KV blocks between phase pools (disaggregation)
+    kv_transfer_time: float = 0.0
     preemptions: int = 0
     # token accounting recorded by the engine at finish; the API layer's
     # Usage block is built from these (OpenAI usage.prompt/completion_tokens)
@@ -139,6 +146,12 @@ class Request:
     # streaming callback: fn(request, token_id, now) — the engine calls this
     # per generated token, matching the paper's streaming benchmark setup
     on_token: Optional[Callable] = None
+    # disaggregated serving (repro.core.disagg): the KVHandoff produced by
+    # the prefill hop and consumed by the decode hop, and the number of
+    # times the request was transparently restarted after losing its
+    # assigned instance mid-stream
+    handoff: Optional[object] = None
+    disagg_retries: int = 0
 
     @property
     def prompt_len(self) -> int:

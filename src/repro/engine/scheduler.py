@@ -43,20 +43,34 @@ class ScheduleOutput:
     preempted: list = field(default_factory=list)
 
 
+#: engine phase specialisation (disaggregated serving, repro.core.disagg):
+#: a prefill-only engine runs requests to their first token then exports a
+#: KVHandoff; a decode-only engine imports handoffs and continues decoding.
+PHASE_MODES = ("unified", "prefill_only", "decode_only")
+
+
 class Scheduler:
     def __init__(self, allocator: BlockAllocator, max_num_seqs: int = 64,
-                 max_prefill_tokens: int = 2048, max_model_len: int = 8192):
+                 max_prefill_tokens: int = 2048, max_model_len: int = 8192,
+                 phase_mode: str = "unified"):
+        assert phase_mode in PHASE_MODES, phase_mode
         self.alloc = allocator
         self.max_num_seqs = max_num_seqs
         self.max_prefill_tokens = max_prefill_tokens
         self.max_model_len = max_model_len
+        self.phase_mode = phase_mode
         self.waiting: deque[Request] = deque()
         self.running: list[RunningSeq] = []
         self.free_slots = list(range(max_num_seqs - 1, -1, -1))
 
     # ------------------------------------------------------------------
     def add_request(self, req: Request, now: float):
-        req.metrics.arrival_time = now
+        # the decode hop of a disaggregated request keeps its original
+        # arrival (ttft/e2el span both hops); only the local enqueue time
+        # feeding the queue-time autoscaler signal is reset
+        if req.handoff is None and not req.output_tokens:
+            req.metrics.arrival_time = now
+        req.metrics.last_enqueue_time = now
         req.status = RequestStatus.WAITING
         self.waiting.append(req)
 
@@ -64,10 +78,15 @@ class Scheduler:
         return bool(self.waiting or self.running)
 
     def queue_time_of_head(self, now: float) -> float:
-        """The autoscaler's signal: how long the FCFS head has waited."""
+        """The autoscaler's signal: how long the FCFS head has waited at
+        THIS engine (a resumed decode hop does not drag its prefill-hop
+        wait into the local signal)."""
         if not self.waiting:
             return 0.0
-        return now - self.waiting[0].metrics.arrival_time
+        m = self.waiting[0].metrics
+        enq = m.last_enqueue_time if m.last_enqueue_time is not None \
+            else m.arrival_time
+        return now - enq
 
     # ------------------------------------------------------------------
     def _try_admit(self, now: float) -> Optional[RunningSeq]:

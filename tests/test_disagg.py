@@ -1,0 +1,599 @@
+"""Disaggregated prefill/decode serving (repro.core.disagg).
+
+Unit tests cover the KV handoff wire objects, phase-specialised engines
+and the DisaggregatedRouter; integration tests run declaratively managed
+two-pool deployments on the virtual clock — two-hop completion, decode
+instance death mid-stream (transparent retry via reconciliation), pool
+autoscaling — plus the PR's satellite features (max_surge/max_unavailable
+rolling budgets, queue admission control, n>1 fan-out)."""
+import pytest
+
+from repro import configs
+from repro.api import AdminClient, APIStatusError, ServingClient
+from repro.config import ServiceConfig
+from repro.core.controller import ClusterSpec, ControlPlane
+from repro.core.deployments import ModelDeploymentSpec
+from repro.core.disagg import (DisaggProfile, DisaggregatedRouter,
+                               DisaggregationSpec, KVHandoff,
+                               export_handoff, import_handoff)
+from repro.data.burstgpt import mixed_burst
+from repro.engine.engine import LLMEngine
+from repro.engine.executor import SimExecutor
+from repro.engine.kv_cache import BlockAllocator, SequenceKV
+from repro.engine.request import Request, RequestStatus, SamplingParams
+from repro.config import GPU_H100
+
+MODEL = "smollm-135m"
+
+
+def req(n=70, out=8, prompt=None):
+    return Request(prompt_tokens=prompt if prompt is not None else
+                   list(range(1, n + 1)),
+                   sampling=SamplingParams(target_output_len=out,
+                                           max_new_tokens=out))
+
+
+def make_engine(phase="unified", num_blocks=256, block_size=16):
+    cfg = configs.get(MODEL)
+    ex = SimExecutor(cfg, GPU_H100)
+    return LLMEngine(cfg, ex, num_blocks=num_blocks, block_size=block_size,
+                     max_num_seqs=8, max_prefill_tokens=256,
+                     max_model_len=2048, phase_mode=phase)
+
+
+def drive(engine, t=0.0, until=60.0):
+    while engine.has_work() and t < until:
+        rep = engine.step(t)
+        t += max(rep.elapsed, 1e-3)
+    return t
+
+
+# ---------------------------------------------------------------------------
+# unit: KV handoff wire objects
+# ---------------------------------------------------------------------------
+
+def test_handoff_roundtrips_and_covers_complete_blocks():
+    toks = list(range(1, 71))
+    h = export_handoff(toks, block_size=16, first_token=99,
+                       kv_bytes_per_token=100.0)
+    assert h.tokens_covered == 64 and len(h.block_hashes) == 4
+    assert h.prompt_len == 70 and h.first_token == 99
+    assert h.kv_bytes == 6400.0
+    again = KVHandoff.from_dict(h.to_dict())
+    assert again == h
+
+
+def test_import_handoff_enables_match_prefix():
+    toks = list(range(1, 71))
+    h = export_handoff(toks, block_size=16, first_token=99)
+    dst = BlockAllocator(64, 16)
+    assert import_handoff(dst, h) == 4
+    kv = SequenceKV(dst)
+    assert kv.match_prefix(toks) == h.tokens_covered
+    kv.release()
+    # re-import is a no-op (transfer dedup)
+    assert import_handoff(dst, h) == 0
+
+
+def test_import_handoff_degrades_gracefully():
+    toks = list(range(1, 200))
+    h = export_handoff(toks, block_size=16, first_token=1)
+    # exhausted allocator: partial import, prefix still usable
+    tiny = BlockAllocator(2, 16)
+    assert import_handoff(tiny, h) == 2
+    # prefix caching off / mismatched block size: nothing imported
+    off = BlockAllocator(64, 16, enable_prefix_caching=False)
+    assert import_handoff(off, h) == 0
+    other = BlockAllocator(64, 32)
+    assert import_handoff(other, h) == 0
+
+
+# ---------------------------------------------------------------------------
+# unit: phase-specialised engines
+# ---------------------------------------------------------------------------
+
+def test_prefill_only_engine_stops_at_first_token_and_exports():
+    eng = make_engine("prefill_only")
+    handoffs = []
+    eng.on_handoff = lambda r, h, now: handoffs.append((r, h, now))
+    r = req(n=70, out=8)
+    eng.add_request(r, 0.0)
+    drive(eng)
+    assert len(r.output_tokens) == 1          # TTFT from the prefill pool
+    assert r.status is RequestStatus.MIGRATING
+    assert not eng.scheduler.has_work()       # slot + blocks released
+    assert len(handoffs) == 1
+    _, h, _ = handoffs[0]
+    assert h.first_token == r.output_tokens[0]
+    assert h.tokens_covered == 64
+    assert eng.metrics.handoffs_exported == 1
+    assert r.handoff is h
+
+
+def test_prefill_only_engine_finishes_single_token_requests_locally():
+    eng = make_engine("prefill_only")
+    eng.on_handoff = lambda *a: pytest.fail("no handoff for 1-token output")
+    r = req(out=1)
+    eng.add_request(r, 0.0)
+    drive(eng)
+    assert r.status is RequestStatus.FINISHED
+    assert len(r.output_tokens) == 1
+
+
+def test_decode_engine_resumes_from_handoff_without_duplicates():
+    pre = make_engine("prefill_only")
+    pre.on_handoff = lambda *a: None
+    r = req(n=70, out=8)
+    pre.add_request(r, 0.0)
+    t = drive(pre)
+    first = r.output_tokens[0]
+
+    dec = make_engine("decode_only")
+    dec.add_request(r, t + 1.0)
+    assert dec.metrics.handoffs_imported == 1
+    assert dec.metrics.handoff_blocks_imported == 4
+    drive(dec, t=t + 1.0)
+    assert r.status is RequestStatus.FINISHED
+    assert len(r.output_tokens) == 8          # exactly target, no dupes
+    assert r.output_tokens[0] == first        # hop-1 token preserved
+    assert r.metrics.ttft is not None and r.metrics.e2el is not None
+    assert r.metrics.e2el >= r.metrics.ttft   # original arrival kept
+
+
+def test_decode_hop_keeps_local_queue_time_signal():
+    dec = make_engine("decode_only")
+    r = req(n=70, out=8)
+    r.handoff = export_handoff(r.prompt_tokens, 16, first_token=5)
+    r.output_tokens = [5]
+    r.metrics.arrival_time = 0.0
+    dec.add_request(r, 100.0)
+    assert r.metrics.arrival_time == 0.0          # e2el base preserved
+    assert dec.scheduler.queue_time_of_head(103.0) == pytest.approx(3.0)
+
+
+# ---------------------------------------------------------------------------
+# unit: phase-aware routing
+# ---------------------------------------------------------------------------
+
+def _eps(phases):
+    return [{"id": i + 1, "node": f"n{i}", "port": 8000, "model_name": MODEL,
+             "bearer_token": "t", "ready_at": 1.0, "phase": ph}
+            for i, ph in enumerate(phases)]
+
+
+def test_disaggregated_router_routes_by_hop_phase():
+    pol = DisaggregatedRouter(inner="round_robin")
+    rows = _eps(["prefill", "decode", None])
+    fresh = req()
+    assert pol.select(rows, fresh)["phase"] == "prefill"
+    resumed = req()
+    resumed.handoff = object()
+    assert pol.select(rows, resumed)["phase"] == "decode"
+    assert pol.hops == {"prefill": 1, "decode": 1}
+
+
+def test_disaggregated_router_falls_back_to_unified_then_any():
+    pol = DisaggregatedRouter(inner="round_robin")
+    resumed = req()
+    resumed.output_tokens = [7]
+    # no decode pool -> unified instance
+    assert pol.select(_eps(["prefill", None]), resumed)["phase"] is None
+    # nothing but prefill -> last resort, still answers
+    assert pol.select(_eps(["prefill"]), resumed)["phase"] == "prefill"
+    assert pol.pool_fallbacks == 2
+
+
+def test_disaggregated_router_registered_in_policy_registry():
+    from repro.core.router import make_policy
+    pol = make_policy("disaggregated", load_fn=lambda k: {})
+    assert pol.name == "disaggregated" and pol.inner_name == "least_loaded"
+    # no self-nesting
+    assert DisaggregatedRouter(inner="disaggregated").inner_name \
+        == "least_loaded"
+
+
+# ---------------------------------------------------------------------------
+# spec validation + manifests
+# ---------------------------------------------------------------------------
+
+def test_disaggregation_spec_validation_is_field_addressed():
+    cases = [
+        (dict(prefill_replicas=0, min_prefill_replicas=1),
+         "disaggregation.prefill_replicas"),
+        (dict(max_decode_replicas=0), "disaggregation.max_decode_replicas"),
+        (dict(transfer_bandwidth=0.0), "disaggregation.transfer_bandwidth"),
+        (dict(max_retries=-1), "disaggregation.max_retries"),
+    ]
+    for kw, param in cases:
+        spec = ModelDeploymentSpec(model=MODEL,
+                                   disaggregation=DisaggregationSpec(**kw))
+        with pytest.raises(APIStatusError) as e:
+            spec.validate()
+        assert e.value.status == 422 and e.value.error.param == param
+
+
+def test_spec_manifest_roundtrip_with_disaggregation():
+    spec = ModelDeploymentSpec(
+        model=MODEL, max_surge=2, max_unavailable=1,
+        disaggregation=DisaggregationSpec(prefill_replicas=2,
+                                          decode_replicas=3,
+                                          max_decode_replicas=4,
+                                          transfer_bandwidth=1e9))
+    spec.validate()
+    again = ModelDeploymentSpec.from_dict(spec.to_dict())
+    assert again == spec
+    with pytest.raises(APIStatusError) as e:
+        ModelDeploymentSpec.from_dict(
+            {"model": MODEL, "disaggregation": {"bogus": 1}})
+    assert e.value.error.param == "disaggregation.bogus"
+
+
+def test_rolling_budget_validation():
+    with pytest.raises(APIStatusError) as e:
+        ModelDeploymentSpec(model=MODEL, max_surge=-1).validate()
+    assert e.value.error.param == "max_surge"
+    with pytest.raises(APIStatusError) as e:
+        ModelDeploymentSpec(model=MODEL, max_unavailable=True).validate()
+    assert e.value.error.param == "max_unavailable"
+    with pytest.raises(APIStatusError) as e:
+        ModelDeploymentSpec(model=MODEL, max_surge=0,
+                            max_unavailable=0).validate()
+    assert e.value.error.param == "max_surge"
+    # legacy default (None) and explicit budgets both pass
+    ModelDeploymentSpec(model=MODEL, max_surge=0,
+                        max_unavailable=1).validate()
+
+
+# ---------------------------------------------------------------------------
+# integration: declarative two-pool deployments on the virtual clock
+# ---------------------------------------------------------------------------
+
+def plane(services=None, **cluster_kw):
+    cp = ControlPlane(ClusterSpec(num_nodes=6,
+                                  services=services or ServiceConfig(),
+                                  **cluster_kw),
+                      alert_rules=[])
+    cp.add_tenant("t", "sk-test")
+    cp.register_model(configs.get(MODEL))
+    return cp
+
+
+def disagg_spec(prefill=1, decode=1, **kw):
+    dis_kw = {k[len("dis_"):]: v for k, v in kw.items()
+              if k.startswith("dis_")}
+    spec_kw = {k: v for k, v in kw.items() if not k.startswith("dis_")}
+    spec_kw.setdefault("est_load_time", 5.0)
+    return ModelDeploymentSpec(
+        model=MODEL, replicas=prefill + decode, max_replicas=8,
+        disaggregation=DisaggregationSpec(
+            prefill_replicas=prefill, decode_replicas=decode,
+            max_prefill_replicas=4, max_decode_replicas=4, **dis_kw),
+        **spec_kw)
+
+
+def pool_phases(cp):
+    return sorted(ep["phase"] or "unified"
+                  for ep in cp.ready_endpoints(MODEL))
+
+
+def test_reconciler_brings_up_phase_pools():
+    cp = plane()
+    admin = AdminClient(cp)
+    admin.apply(disagg_spec(prefill=2, decode=1))
+    cp.run_until(120.0)
+    assert pool_phases(cp) == ["decode", "prefill", "prefill"]
+    dep = admin.get(MODEL)
+    assert dep.status.ready_replicas == 3
+    assert dep.status.condition("Ready").status is True
+    phases = {inst.phase for inst in cp.registry.values()}
+    assert phases == {"prefill", "decode"}
+    # engines are phase-specialised
+    modes = sorted(i.engine.phase_mode for i in cp.registry.values())
+    assert modes == ["decode_only", "prefill_only", "prefill_only"]
+
+
+def test_two_hop_completion_with_transfer_overhead():
+    cp = plane()
+    AdminClient(cp).apply(disagg_spec(prefill=1, decode=1,
+                                      dis_transfer_bandwidth=1e6))
+    cp.run_until(120.0)
+    client = ServingClient(cp, api_key="sk-test")
+    pending = client.completions(model=MODEL, prompt=list(range(1, 200)),
+                                 max_tokens=12, target_output_len=12)
+    resp = pending.result(max_wait=300.0)
+    assert resp.choices[0].finish_reason == "length"
+    assert len(resp.choices[0].tokens) == 12
+    r = pending.request
+    assert r.metrics.kv_transfer_time > 0.0   # roofline bytes / bandwidth
+    assert cp.web_gateway.stats.handoffs == 1
+    # both pools did their half
+    by_phase = {i.phase: i.engine.metrics for i in cp.registry.values()}
+    assert by_phase["prefill"].handoffs_exported == 1
+    assert by_phase["decode"].handoffs_imported == 1
+    assert by_phase["decode"].tokens_generated == 11
+
+
+def test_unified_to_disaggregated_transition_drains_orphans():
+    cp = plane()
+    admin = AdminClient(cp)
+    admin.apply(ModelDeploymentSpec(model=MODEL, replicas=2, max_replicas=8,
+                                    est_load_time=5.0))
+    cp.run_until(120.0)
+    assert pool_phases(cp) == ["unified", "unified"]
+    admin.apply(disagg_spec(prefill=1, decode=1))
+    cp.run_until(400.0)
+    assert pool_phases(cp) == ["decode", "prefill"]
+    assert admin.get(MODEL).status.condition("Ready").status is True
+
+
+def test_pool_addressed_replica_patch_and_webhook():
+    cp = plane()
+    admin = AdminClient(cp)
+    admin.apply(disagg_spec(prefill=1, decode=1))
+    cp.run_until(120.0)
+    dep = admin.get(MODEL)
+    # pool-addressed autoscaler patch, clamped to the pool window
+    assert cp.reconciler.patch_replicas(dep.config_id, +2,
+                                        pool="prefill") == (1, 3)
+    assert dep.spec.disaggregation.prefill_replicas == 3
+    assert cp.reconciler.patch_replicas(dep.config_id, +9,
+                                        pool="prefill") == (3, 4)
+    # a pool-less alert grows the decode pool on disaggregated deployments
+    assert cp.metrics_gateway.grafana_webhook(
+        {"config_id": dep.config_id, "delta": +1, "rule": "r"}) == 200
+    assert dep.spec.disaggregation.decode_replicas == 2
+    cp.run_until(600.0)
+    assert sorted(pool_phases(cp)) == ["decode", "decode"] + ["prefill"] * 4
+
+
+def test_scrape_exports_per_phase_depths():
+    cp = plane()
+    AdminClient(cp).apply(disagg_spec(prefill=1, decode=1))
+    cp.run_until(120.0)
+    dep = AdminClient(cp).get(MODEL)
+    cp.metrics_gateway.scrape(cp.loop.now)
+    _, agg = cp.metrics_gateway.history[dep.config_id][-1]
+    for key in ("queue_time_max_prefill", "queue_time_max_decode",
+                "waiting_prefill", "waiting_decode", "running_decode"):
+        assert key in agg
+    # prometheus service discovery labels the pools
+    labels = {t["labels"]["phase"]
+              for t in cp.metrics_gateway.prometheus_targets()}
+    assert labels == {"prefill", "decode"}
+
+
+def test_pool_alert_rule_scales_decode_pool():
+    from repro.core.autoscaler import DECODE_QUEUE_SCALE_UP
+    cp = plane()
+    AdminClient(cp).apply(disagg_spec(prefill=1, decode=1))
+    cp.run_until(120.0)
+    dep = AdminClient(cp).get(MODEL)
+    now = cp.loop.now
+    h = cp.metrics_gateway.history[dep.config_id]
+    h.clear()
+    # breached samples spanning the whole sustain window [now, now+31]
+    for i in range(9):
+        h.append((now - 10 + 5 * i, {"n": 1, "queue_time_max_decode": 10.0}))
+    cp.autoscaler.rules = [DECODE_QUEUE_SCALE_UP]
+    cp.autoscaler.evaluate(now)
+    cp.autoscaler.evaluate(now + 31.0)
+    assert dep.spec.disaggregation.decode_replicas == 2
+    assert dep.spec.disaggregation.prefill_replicas == 1
+
+
+# ---------------------------------------------------------------------------
+# decode-pool instance death mid-stream (acceptance)
+# ---------------------------------------------------------------------------
+
+def _decode_job(cp):
+    for ep in cp.db["ai_model_endpoints"].rows.values():
+        if ep["phase"] == "decode":
+            return cp.db["ai_model_endpoint_jobs"].get(ep["endpoint_job_id"])
+    raise AssertionError("no decode endpoint")
+
+
+def _stream_mid_decode(cp, client, out=40):
+    stream = client.completions(model=MODEL, prompt=list(range(1, 200)),
+                                max_tokens=out, target_output_len=out,
+                                stream=True)
+    cp.loop.run_while(lambda: len(stream.events) < 3, max_t=cp.loop.now + 300)
+    assert len(stream.events) >= 3 and not stream.closed
+    return stream
+
+
+def test_decode_instance_death_reruns_prefill_hop_via_reconciliation():
+    cp = plane()
+    AdminClient(cp).apply(disagg_spec(prefill=1, decode=1))
+    cp.run_until(120.0)
+    client = ServingClient(cp, api_key="sk-test")
+    stream = _stream_mid_decode(cp, client)
+    # kill the decode pool's Slurm job mid-stream
+    cp.slurm.scancel(_decode_job(cp)["slurm_job_id"])
+    # no hung TokenStream: the gateway re-runs the prefill hop; the decode
+    # hop rides reconciliation (the reconciler replaces the dead replica,
+    # falling back to live instances in the meantime)
+    cp.loop.run_while(lambda: not stream.closed, max_t=cp.loop.now + 900.0)
+    assert stream.closed
+    assert stream.error is None
+    assert stream.finish_reason == "length"
+    assert stream.req.disagg_retries == 1
+    assert cp.web_gateway.stats.disagg_retries == 1
+    # the restart discarded pre-crash events: the terminal views carry
+    # exactly the retry's completion, and engine-side latency metrics
+    # were re-stamped within the retry epoch (never negative)
+    assert len(stream.output_tokens) == 40
+    assert stream.req.metrics.ttft is not None \
+        and stream.req.metrics.ttft > 0.0
+    # reconciliation healed the decode pool
+    cp.run_until(cp.loop.now + 120.0)
+    assert pool_phases(cp) == ["decode", "prefill"]
+
+
+def test_decode_instance_death_without_retry_budget_is_terminal():
+    cp = plane()
+    AdminClient(cp).apply(disagg_spec(prefill=1, decode=1,
+                                      dis_max_retries=0))
+    cp.run_until(120.0)
+    client = ServingClient(cp, api_key="sk-test")
+    stream = _stream_mid_decode(cp, client)
+    cp.slurm.scancel(_decode_job(cp)["slurm_job_id"])
+    cp.loop.run_until(cp.loop.now + 30.0)
+    # still terminal — an error event, not a hang
+    assert stream.closed and stream.error is not None
+    assert stream.error.http_status == 462
+
+
+# ---------------------------------------------------------------------------
+# satellites: rolling budgets, admission control, n>1 fan-out
+# ---------------------------------------------------------------------------
+
+def _live_jobs(cp, dep):
+    return cp.reconciler._jobs(dep)
+
+
+def test_max_surge_allows_multiple_spares_during_rolling_update():
+    cp = plane()
+    admin = AdminClient(cp)
+    admin.apply(ModelDeploymentSpec(model=MODEL, replicas=2, min_replicas=2,
+                                    max_replicas=8, est_load_time=5.0,
+                                    max_surge=2))
+    cp.run_until(120.0)
+    dep = admin.get(MODEL)
+    spec = ModelDeploymentSpec.from_dict(dep.spec.to_dict())
+    spec.model_version = "2"                    # template change -> roll
+    admin.apply(spec)
+    # surge submissions are still paced one per tick, but the pool may run
+    # `max_surge` replicas above target while stale ones retire
+    peak = 0
+    t = cp.loop.now
+    while cp.loop.now < t + 400.0:
+        cp.run_until(cp.loop.now + 5.0)
+        peak = max(peak, len(_live_jobs(cp, dep)))
+        if dep.status.condition("Ready").status \
+                and dep.status.observed_generation == dep.generation:
+            break
+    assert peak == 4                            # 2 desired + 2 surge
+    assert dep.status.condition("Ready").status is True
+
+
+def test_max_unavailable_retires_without_fresh_ready_replica():
+    cp = plane()
+    admin = AdminClient(cp)
+    admin.apply(ModelDeploymentSpec(model=MODEL, replicas=2, min_replicas=1,
+                                    max_replicas=8, est_load_time=30.0,
+                                    max_surge=1, max_unavailable=1))
+    cp.run_until(240.0)
+    dep = admin.get(MODEL)
+    assert dep.status.ready_replicas == 2
+    spec = ModelDeploymentSpec.from_dict(dep.spec.to_dict())
+    spec.model_version = "2"
+    admin.apply(spec)
+    # a couple of reconcile ticks: with an unavailability budget a stale
+    # ready replica starts draining before any fresh replica is ready
+    # (tick 1 spends the submission; tick 2 retires within the budget)
+    cp.run_until(cp.loop.now + 11.0)
+    assert dep.status.draining_replicas >= 1
+    assert not any(j["ready_at"] for j in _live_jobs(cp, dep)
+                   if dep._job_template.get(j["id"], 0)
+                   >= dep.template_generation)
+
+
+def test_admission_control_rejects_unservable_requests_early():
+    mistral = "mistral-small-24b"
+    svc = ServiceConfig(queue_capacity=8, queue_ttl=30.0,
+                        admission_control=True)
+    cp = ControlPlane(ClusterSpec(num_nodes=2, services=svc), alert_rules=[])
+    cp.add_tenant("t", "sk-test")
+    cp.register_model(configs.get(mistral))
+    # configured but nothing ready yet -> the queue path
+    AdminClient(cp).apply(ModelDeploymentSpec(model=mistral,
+                                              est_load_time=3600.0))
+    client = ServingClient(cp, api_key="sk-test")
+    # a ~45 s estimated request can never meet the 30 s queue TTL
+    with pytest.raises(APIStatusError) as e:
+        client.completions(model=mistral, prompt=[1] * 4096,
+                           max_tokens=2000, target_output_len=2000)
+    assert e.value.status == 461
+    assert e.value.error.retry_after == 30.0
+    assert "estimated service time" in e.value.error.message
+    assert cp.web_gateway.stats.rejected_admission == 1
+    # a small request still queues (202)
+    pending = client.completions(model=mistral, prompt=[1] * 16,
+                                 max_tokens=4, target_output_len=4)
+    assert pending.status == 202
+    assert cp.web_gateway.queue.depth(mistral) == 1
+
+
+def test_n_greater_than_one_fans_out_and_aggregates_usage():
+    cp = plane()
+    AdminClient(cp).apply(ModelDeploymentSpec(model=MODEL, replicas=1,
+                                              max_replicas=8,
+                                              est_load_time=5.0))
+    cp.run_until(120.0)
+    client = ServingClient(cp, api_key="sk-test")
+    pending = client.completions(model=MODEL, prompt=list(range(1, 40)),
+                                 max_tokens=6, target_output_len=6, n=3)
+    resp = pending.result(max_wait=300.0)
+    assert [c.index for c in resp.choices] == [0, 1, 2]
+    assert all(len(c.tokens) == 6 for c in resp.choices)
+    # choices sample independently (token synthesis keys on request id)
+    assert len({tuple(c.tokens) for c in resp.choices}) > 1
+    # OpenAI usage contract: prompt counted once, completions summed
+    assert resp.usage.prompt_tokens == 39
+    assert resp.usage.completion_tokens == 18
+    assert resp.usage.total_tokens == 57
+
+
+def test_n_validation():
+    from repro.api import CompletionRequest
+    for bad in (0, 17, 1.5, True):
+        with pytest.raises(APIStatusError) as e:
+            CompletionRequest(model=MODEL, prompt=[1], n=bad).validate()
+        assert e.value.error.param == "n"
+    with pytest.raises(APIStatusError) as e:
+        CompletionRequest(model=MODEL, prompt=[1], n=2,
+                          stream=True).validate()
+    assert e.value.error.param == "n"
+    r = CompletionRequest(model=MODEL, prompt=[1], n=3)
+    r.validate()
+    assert CompletionRequest.from_dict(r.to_dict()) == r
+
+
+# ---------------------------------------------------------------------------
+# workload + benchmark plumbing
+# ---------------------------------------------------------------------------
+
+def test_mixed_burst_shape():
+    wl = mixed_burst(64, seed=0)
+    assert len(wl.requests) == 64
+    lens = [r.prompt_len for r in wl.requests]
+    assert min(lens) >= 32 and max(lens) <= 8192
+    assert any(n >= 1024 for n in lens) and any(n <= 1024 for n in lens)
+    # deterministic
+    again = mixed_burst(64, seed=0)
+    assert [r.prompt_tokens for r in again.requests] == \
+        [r.prompt_tokens for r in wl.requests]
+
+
+def test_disagg_benchmark_smoke():
+    from benchmarks.disagg import run_scenario
+    row = run_scenario("disaggregated", 12, total=2, prefill=1)
+    assert row["completed"] == 12 and row["failed"] == 0
+    assert row["handoffs"] >= 12
+    assert row["transfer_mean_ms"] > 0.0
+    for key in ("ttft_p99_ms", "tpot_p99_ms", "e2el_p99_ms",
+                "transfer_p99_ms"):
+        assert key in row
+
+
+@pytest.mark.slow
+def test_disaggregated_beats_unified_p99_ttft_at_500():
+    """The PR's acceptance criterion: at >= 500 concurrency on the mixed
+    workload, phase separation keeps prompt admission off the decode
+    residency path and p99 TTFT beats the unified fleet (the decode-pool
+    queue wait it trades for shows up in TBT tails, reported honestly)."""
+    from benchmarks.disagg import run_scenario
+    uni = run_scenario("unified", 500)
+    dis = run_scenario("disaggregated", 500)
+    assert dis["ttft_p99_ms"] < uni["ttft_p99_ms"]
+    assert dis["transfer_mean_ms"] > 0.0

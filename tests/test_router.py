@@ -157,6 +157,41 @@ def test_prefix_aware_repins_when_endpoint_disappears():
     assert pol.select(remaining, req(prompt=prompt))["id"] == again["id"]
 
 
+def test_prefix_aware_evicts_lru_at_max_entries():
+    pol = PrefixAware(prefix_tokens=4, max_entries=3)
+    rows = eps(2)
+    prompts = [[p] * 4 + [1] for p in range(10, 16)]   # 6 distinct prefixes
+    for p in prompts:
+        pol.select(rows, req(prompt=p))
+    # the map stays bounded: only the 3 most recent prefixes are pinned
+    assert pol.stats()["tracked_prefixes"] == 3
+    assert pol.prefix_misses == 6
+    # recent prefixes still hit ...
+    pol.select(rows, req(prompt=prompts[-1]))
+    assert pol.prefix_hits == 1
+    # ... while an evicted one re-places (miss) and re-pins (hit)
+    pol.select(rows, req(prompt=prompts[0]))
+    assert pol.prefix_misses == 7
+    pol.select(rows, req(prompt=prompts[0]))
+    assert pol.prefix_hits == 2
+    assert pol.stats()["tracked_prefixes"] == 3
+
+
+def test_prefix_aware_hit_refreshes_lru_order():
+    pol = PrefixAware(prefix_tokens=4, max_entries=2)
+    rows = eps(2)
+    a, b, c = ([p] * 4 + [1] for p in (7, 8, 9))
+    pol.select(rows, req(prompt=a))
+    pol.select(rows, req(prompt=b))
+    pol.select(rows, req(prompt=a))     # hit refreshes a's recency
+    pol.select(rows, req(prompt=c))     # evicts b (LRU), not a
+    assert pol.prefix_misses == 3
+    pol.select(rows, req(prompt=a))
+    assert pol.prefix_hits == 2         # a survived the eviction
+    pol.select(rows, req(prompt=b))
+    assert pol.prefix_misses == 4       # b was the one evicted
+
+
 def test_make_policy_factory():
     assert make_policy("round_robin").name == "round_robin"
     assert make_policy("least_loaded").name == "least_loaded"
@@ -206,6 +241,45 @@ def test_queue_drain_stops_on_failed_dispatch():
     n = q.drain(MODEL, 5.0, can_dispatch=lambda m: True)
     assert n == 2 and len(sent) == 2
     assert q.depth(MODEL) == 2          # failed head went back to the front
+
+
+def test_queue_aging_survives_sustained_high_priority_arrivals():
+    """Starvation avoidance under *continuous* high-priority pressure: a
+    fresh priority-5 request arrives every round and capacity allows only
+    one dispatch per round, yet an aged priority-0 request escapes once
+    ``aging * wait`` outruns the newcomers' head start."""
+
+    def preq(priority):
+        r = req()
+        r.priority = priority
+        return r
+
+    def run_rounds(aging, rounds=10):
+        q = GatewayQueue(capacity=64, ttl=1e6, aging=aging)
+        order = []
+        disp = lambda r: (order.append(r.priority), 200)[1]
+        q.offer(preq(0), MODEL, 0.0, dispatch=disp)
+        for k in range(1, rounds + 1):
+            now = 10.0 * k
+            q.offer(preq(5), MODEL, now, dispatch=disp)
+            budget = [1]                    # one dispatch slot per round
+
+            def can(m, b=budget):
+                if b[0] <= 0:
+                    return False
+                b[0] -= 1
+                return True
+
+            q.drain(MODEL, now, can_dispatch=can)
+            if 0 in order:
+                return k, order
+        return None, order
+
+    escaped_round, order = run_rounds(aging=0.3)
+    assert escaped_round is not None and escaped_round <= 3
+    # strict priority (aging=0): the same pressure starves it forever
+    starved_round, order0 = run_rounds(aging=0.0)
+    assert starved_round is None and 0 not in order0
 
 
 # ---------------------------------------------------------------------------

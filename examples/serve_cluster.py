@@ -47,6 +47,10 @@ def main():
     cp.add_tenant("uni", "sk-cluster")
     cp.register_model(configs.get(MODEL))
     admin = AdminClient(cp)
+    # QoS policy for the tenant (docs/tenancy.md): generous token-bucket
+    # rate limits (429 with retry_after past them) + usage metering
+    admin.apply_tenant(name="uni", weight=1.0, requests_per_sec=50.0,
+                       burst_requests=200, max_inflight=512)
     watch = admin.watch()        # kubectl get -w analogue
     admin.apply(model=MODEL, replicas=1, min_replicas=1, max_replicas=6,
                 gpus_per_node=2, est_load_time=45.0,
@@ -108,6 +112,8 @@ def main():
     model_rs = rs.get("per_model", {}).get(MODEL, rs)
     print(f"router policy={model_rs['policy']}  picks={model_rs['picks']}")
     print(f"gateway queue: {rs['queue']}")
+    # per-tenant metering: what the billing/usage dashboard reads
+    print(f"tenant usage: {admin.tenant_usage('uni').to_dict()}")
 
 
 if __name__ == "__main__":

@@ -20,6 +20,7 @@ from repro.api.schemas import (ChatChoice, ChatCompletionChunk,
                                CompletionChoice, CompletionRequest,
                                CompletionResponse, Usage, encode_text)
 from repro.api.streaming import StreamSession, TokenEvent, TokenStream
+from repro.api.tenancy import TenantUsage
 
 __all__ = [
     "APIError", "APIStatusError", "AdminClient", "ChatChoice",
@@ -28,7 +29,7 @@ __all__ = [
     "CompletionRequest", "CompletionResponse", "DeploymentWatch",
     "ERROR_TABLE", "ErrorSpec", "MultiPendingCompletion",
     "PendingCompletion", "ServingClient",
-    "StreamSession", "SUCCESS_STATUSES", "TokenEvent", "TokenStream",
-    "Usage", "WatchEvent", "encode_text", "error_for_status",
+    "StreamSession", "SUCCESS_STATUSES", "TenantUsage", "TokenEvent",
+    "TokenStream", "Usage", "WatchEvent", "encode_text", "error_for_status",
     "validation_error",
 ]

@@ -73,8 +73,11 @@ class AdminClient:
 
     def __init__(self, plane):
         # `plane` is a ControlPlane (or anything exposing .reconciler);
-        # passing a Reconciler directly also works.
+        # passing a Reconciler directly also works.  `.tenancy` (the
+        # multi-tenant QoS manager) is optional — the tenant verbs below
+        # raise if the plane has none.
         self.reconciler = getattr(plane, "reconciler", plane)
+        self.tenancy = getattr(plane, "tenancy", None)
         self.loop = getattr(plane, "loop", None) or self.reconciler.loop
 
     # -- verbs -------------------------------------------------------------
@@ -105,6 +108,41 @@ class AdminClient:
 
     def delete(self, name: str) -> bool:
         return self.reconciler.delete(name)
+
+    def rollback(self, name: str):
+        """kubectl rollout undo: re-apply the deployment's previous spec
+        revision (422 when there is none)."""
+        return self.reconciler.rollback(name)
+
+    # -- tenant QoS verbs (repro.core.tenancy; docs/tenancy.md) -------------
+    def _tenants(self):
+        if self.tenancy is None:
+            raise TypeError("this control plane has no tenancy manager "
+                            "(plane.tenancy); tenant verbs are unavailable")
+        return self.tenancy
+
+    def apply_tenant(self, spec=None, **fields):
+        """Create or update one tenant's QoS policy.  Pass a `TenantSpec`,
+        its dict manifest, or field keywords (``name`` required)."""
+        if spec is not None and fields:
+            raise TypeError(f"pass either a spec or field keywords, not "
+                            f"both (got spec and {sorted(fields)})")
+        return self._tenants().apply(fields if spec is None else spec)
+
+    def get_tenant(self, name: str):
+        """The tenant's `TenantSpec`, or None (no policy = unlimited)."""
+        return self._tenants().get(name)
+
+    def list_tenants(self) -> list:
+        return self._tenants().list()
+
+    def delete_tenant(self, name: str) -> bool:
+        """Drop the QoS policy (auth row stays; back to defaults)."""
+        return self._tenants().delete(name)
+
+    def tenant_usage(self, name: str, since=None, model=None):
+        """Aggregated `TenantUsage` from the windowed metering records."""
+        return self._tenants().usage(name, since=since, model=model)
 
     def watch(self) -> DeploymentWatch:
         """kubectl get -w: live event stream until `stop()`."""

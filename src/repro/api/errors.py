@@ -1,7 +1,7 @@
 """OpenAI-style error taxonomy for the serving API (paper §3.1.2).
 
-The paper's Web Gateway answers with *custom status codes* (401/422/460/
-461/462 plus 200/202).  Bare ints leak engine internals to every client, so
+The paper's Web Gateway answers with *custom status codes* (401/422/429/
+460/461/462 plus 200/202).  Bare ints leak engine internals to every client, so
 this module defines the single exhaustive mapping from those codes to
 structured OpenAI-shaped error objects — ``{"error": {"type", "code",
 "message", "param", "retry_after"}}`` — that the `ServingClient` facade and
@@ -33,6 +33,9 @@ ERROR_TABLE: dict[int, ErrorSpec] = {
                    "Incorrect API key provided."),
     422: ErrorSpec(422, "invalid_request_error", "invalid_value",
                    "Request validation failed."),
+    429: ErrorSpec(429, "rate_limit_error", "tenant_quota_exceeded",
+                   "The tenant's rate limit or concurrency cap was "
+                   "exceeded.", retryable=True),
     460: ErrorSpec(460, "invalid_request_error", "model_not_found",
                    "The requested model does not exist or has no "
                    "configuration."),

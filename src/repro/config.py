@@ -194,7 +194,17 @@ class ServiceConfig:
     queue_ttl: float = 30.0            # seconds before a queued req expires
     queue_drain_interval: float = 1.0  # periodic expiry/drain tick
     queue_aging: float = 0.0           # priority points per queued second
+    # weighted fair queuing across tenants in the gateway queue (one
+    # bucket per authenticated tenant, service measured in tokens over
+    # TenantSpec.weight); False = single per-model bucket (plain
+    # priority-FIFO, the PR-3 behaviour) — the benchmark baseline
+    fair_queuing: bool = True
     retry_after_cooldown: float = 60.0  # 461/462 retry hint, queue disabled
+    # gateway auth cache: bound on cached keys (LRU beyond it) and the
+    # short TTL for cached *negative* lookups — an attacker hammering bad
+    # keys must not buy a DB trip per probe nor grow the cache unboundedly
+    auth_cache_max: int = 1024
+    auth_neg_ttl: float = 5.0
     # admission control: when queuing, reject-early (461 + retry_after)
     # any request whose roofline-estimated service time already exceeds
     # the queue TTL it would be held under — it could never be served

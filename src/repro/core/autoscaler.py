@@ -57,6 +57,19 @@ GATEWAY_QUEUE_SCALE_UP = AlertRule(
     name="gateway_queue>0_for_15s", metric="gateway_queued", op="gt",
     threshold=0.5, for_duration=15.0, delta=+1, cooldown=60.0)
 
+# multi-tenant QoS (repro.core.tenancy): `tenant_queue_weighted` is the
+# worst per-tenant backlog *normalised by that tenant's fair-share
+# weight*, emitted only while >= 2 tenants are backlogged on the model.
+# It measures contention WFQ can reorder but not serve: a deep queue on
+# a low-weight (small-share) tenant dominates the signal, because that
+# backlog represents many multiples of the share the cluster owes it.
+# A single tenant's backlog keeps the metric at zero — that is plain
+# demand, covered by GATEWAY_QUEUE_SCALE_UP, and the two rules must not
+# double-fire on it.
+TENANT_QUEUE_SCALE_UP = AlertRule(
+    name="tenant_weighted_queue>4_for_15s", metric="tenant_queue_weighted",
+    op="gt", threshold=4.0, for_duration=15.0, delta=+1, cooldown=60.0)
+
 # disaggregated deployments (repro.core.disagg): the Metrics Gateway
 # scrapes per-phase queue depths (`queue_time_max_prefill` / `_decode`),
 # so prefill and decode pools grow independently — sustained prefill
@@ -84,6 +97,7 @@ class Autoscaler:
         self.loop = loop
         self.rules = rules if rules is not None \
             else [QUEUE_TIME_SCALE_UP, GATEWAY_QUEUE_SCALE_UP,
+                  TENANT_QUEUE_SCALE_UP,
                   PREFILL_QUEUE_SCALE_UP, DECODE_QUEUE_SCALE_UP,
                   IDLE_SCALE_DOWN]
         # (config_id, rule name) -> breach start time

@@ -24,6 +24,7 @@ from repro.core.services import (EndpointGateway, EndpointWorker, JobWorker,
                                  SlurmSubmit)
 from repro.core.simclock import EventLoop
 from repro.core.slurm import SimNode, SimSlurm
+from repro.core.tenancy import TenancyManager, TenantSpec
 from repro.core.web_gateway import WebGateway
 from repro.engine.engine import LLMEngine
 from repro.engine.executor import SimExecutor
@@ -87,14 +88,19 @@ class ControlPlane:
         self.autoscaler = Autoscaler(self.metrics_gateway, self.loop,
                                      rules=alert_rules,
                                      eval_interval=self.spec.autoscaler_interval)
+        # multi-tenant QoS: specs/buckets/usage metering over the DB; the
+        # gateway enforces (429 + WFQ weights), the scrape reports
+        self.tenancy = TenancyManager(self.db, self.loop)
         self.web_gateway = WebGateway(
             self.db, self.loop, self.registry,
             services=self.spec.services,
             load_fn=self.metrics_gateway.endpoint_load,
-            service_estimator=self.estimate_service_time)
+            service_estimator=self.estimate_service_time,
+            tenancy=self.tenancy)
         self._cost_cache: dict[str, object] = {}
         # queued gateway demand feeds the scrape; fresh endpoints drain it
         self.metrics_gateway.attach_web_gateway(self.web_gateway)
+        self.metrics_gateway.tenancy = self.tenancy
         self.endpoint_worker.on_ready = self.web_gateway.notify_ready
         # declarative layer: ModelDeployment specs reconciled on the loop;
         # the Job Worker is its executor, the autoscaler its spec patcher
@@ -106,8 +112,15 @@ class ControlPlane:
         self.metrics_gateway.spec_patcher = self.reconciler.patch_replicas
 
     # ------------------------------------------------------------------
-    def add_tenant(self, name: str, api_key: str):
-        return self.db.create_tenant(name, api_key)
+    def add_tenant(self, name: str, api_key: str,
+                   spec: Optional[TenantSpec] = None):
+        """Create the tenant's auth row; an optional `TenantSpec` attaches
+        its QoS policy in the same call (equivalent to a follow-up
+        `AdminClient.apply_tenant`)."""
+        row = self.db.create_tenant(name, api_key)
+        if spec is not None:
+            self.tenancy.apply(spec)
+        return row
 
     def register_model(self, cfg: ModelConfig) -> ModelConfig:
         """Make an engine `ModelConfig` known to the plane without creating

@@ -80,6 +80,21 @@ class Database:
             Table("identity_tenant_authentications",
                   ("id", "tenant_id", "api_key_hash"),
                   fks={"tenant_id": ("identity_tenants", "cascade")}),
+            # QoS policy per tenant (repro.core.tenancy.TenantSpec): fair-
+            # share weight, token-bucket limits, concurrency cap. 1:1 with
+            # identity_tenants; absence = unlimited / weight-1.0 default.
+            Table("identity_tenant_policies",
+                  ("id", "tenant_id", "weight", "requests_per_sec",
+                   "tokens_per_min", "burst_requests", "burst_tokens",
+                   "max_inflight", "priority_class"),
+                  fks={"tenant_id": ("identity_tenants", "cascade")}),
+            # windowed usage metering (60 s windows): what the Metrics
+            # Gateway scrapes as per-tenant series and billing reads
+            Table("tenant_usage_records",
+                  ("id", "tenant_id", "model_name", "window_start",
+                   "requests", "failed", "prompt_tokens",
+                   "completion_tokens", "queue_wait", "kv_transfer_time"),
+                  fks={"tenant_id": ("identity_tenants", "cascade")}),
             Table("ai_model_configurations",
                   ("id", "model_name", "model_version", "instances",
                    "gpus_per_node", "nodes", "est_load_time",

@@ -52,6 +52,10 @@ COND_AVAILABLE = "Available"      # ready replicas >= min_replicas
 COND_READY = "Ready"              # fully converged with the current spec
 COND_PROGRESSING = "Progressing"  # reconciler still has work to do
 
+#: spec revisions kept per deployment for `rollback` (kubectl's
+#: --revision-history-limit analogue)
+MAX_REVISIONS = 10
+
 
 @dataclass
 class ModelDeploymentSpec:
@@ -261,6 +265,10 @@ class ModelDeployment:
     # (t, condition type, new status, reason) — every condition flip, so
     # benchmarks can report e.g. the Ready False->True recovery transition
     transitions: list = field(default_factory=list)
+    # previous spec snapshots, oldest -> newest (kubectl rollout history):
+    # every applied spec change pushes the outgoing spec; `rollback`
+    # re-applies the newest entry.  Bounded to MAX_REVISIONS.
+    revisions: list = field(default_factory=list)
     # endpoint-job row id -> template_generation it was submitted under
     _job_template: dict = field(default_factory=dict)
     # endpoint-job row id -> drain deadline (force-scancel time)
@@ -355,6 +363,12 @@ class Reconciler:
         if spec == dep.spec:
             return dep
         template_changed = spec.template() != dep.spec.template()
+        # snapshot the outgoing spec (deep copy via the manifest: later
+        # autoscaler patches mutate dep.spec in place and must not reach
+        # into the revision history)
+        dep.revisions.append(ModelDeploymentSpec.from_dict(
+            dep.spec.to_dict()))
+        del dep.revisions[:-MAX_REVISIONS]
         dep.spec = spec
         dep.generation += 1
         if template_changed:
@@ -395,6 +409,32 @@ class Reconciler:
             self._emit("SCALED", dep)
             self._update_status(dep, dep.desired_replicas, self.loop.now)
         return dep
+
+    def rollback(self, name: str) -> ModelDeployment:
+        """kubectl rollout undo: re-apply the previous spec revision.
+        Template changes roll back with the same surge/drain machinery a
+        forward update uses; a second rollback returns to where you
+        started (the undone spec is itself pushed as a revision)."""
+        dep = self.deployments.get(name)
+        if dep is None:
+            _fail("name", f"no deployment named {name!r}")
+        # in-place drift (autoscaler patch_replicas / scale) can make the
+        # newest snapshot equal the live spec; "restoring" it would no-op
+        # inside apply() and silently destroy the revision — skip
+        # identical snapshots (apply() re-pushes that state anyway) and
+        # roll back to the newest DISTINCT one
+        popped = []
+        while dep.revisions and dep.revisions[-1] == dep.spec:
+            popped.append(dep.revisions.pop())
+        if not dep.revisions:
+            dep.revisions.extend(reversed(popped))    # history untouched
+            _fail("name", f"deployment {name!r} has no previous spec "
+                          f"revision differing from the live spec")
+        prev = dep.revisions.pop()
+        # apply() pushes the current spec as the newest revision, so
+        # rollback twice round-trips; the popped snapshot is re-applied
+        # as-is (already a deep copy)
+        return self.apply(prev)
 
     def delete(self, name: str) -> bool:
         """Tear the deployment down: scancel every live job (in-flight

@@ -29,10 +29,14 @@ class MetricsGateway:
         self.max_instances = max_instances
         # (config_id) -> deque[(t, aggregated metrics dict)]
         self.history: dict[int, deque] = defaultdict(deque)
+        # tenant name -> deque[(t, per-tenant usage/queue snapshot)] —
+        # the per-tenant series (repro.core.tenancy metering + WFQ depths)
+        self.tenant_history: dict[str, deque] = defaultdict(deque)
         # (node, port) -> latest per-endpoint scrape (least-loaded routing)
         self.endpoint_metrics: dict[tuple, dict] = {}
         self.scale_events: list[tuple] = []   # (t, config_id, delta, reason)
         self.web_gateway = None               # set via attach_web_gateway
+        self.tenancy = None                   # TenancyManager (ControlPlane)
         # Reconciler.patch_replicas, set by the ControlPlane: for configs
         # managed declaratively the webhook patches the deployment SPEC
         # (clamped to its min/max window) instead of mutating the DB row
@@ -100,6 +104,20 @@ class MetricsGateway:
             queued = gw_queue.depth(cfg["model_name"]) if gw_queue else 0
             head_age = gw_queue.head_age(cfg["model_name"], now) \
                 if gw_queue else 0.0
+            # share-weighted tenant backlog: the worst ratio of one
+            # tenant's queued depth to its fair-share weight, emitted only
+            # under CONTENTION (>= 2 tenants backlogged).  A lone tenant's
+            # backlog is plain demand — GATEWAY_QUEUE_SCALE_UP's job; zero
+            # here keeps the two rules from double-firing on it.  With
+            # contention, a deep queue on a low-weight tenant dominates
+            # the signal: backlog per unit of entitled share that WFQ can
+            # reorder but not serve (TENANT_QUEUE_SCALE_UP).
+            tenant_q = 0.0
+            if gw_queue is not None and self.tenancy is not None:
+                depths = gw_queue.depth_by_tenant(cfg["model_name"])
+                if len(depths) >= 2:
+                    tenant_q = max(d / self.tenancy.weight(t)
+                                   for t, d in depths.items())
             if snaps:
                 agg = {
                     "n": len(snaps),
@@ -115,6 +133,7 @@ class MetricsGateway:
                     + queued,
                     "running_total": sum(s["num_running"] for s in snaps),
                     "gateway_queued": queued,
+                    "tenant_queue_weighted": tenant_q,
                 }
                 # disaggregated pools: per-phase depths so the autoscaler's
                 # pool-addressed rules can grow prefill and decode capacity
@@ -137,18 +156,55 @@ class MetricsGateway:
                 # sample (no kv/running keys — series() skips them) so the
                 # autoscaler still sees the backlog
                 agg = {"n": 0, "queue_time_max": head_age,
-                       "waiting_total": queued, "gateway_queued": queued}
+                       "waiting_total": queued, "gateway_queued": queued,
+                       "tenant_queue_weighted": tenant_q}
             else:
                 continue
             h = self.history[cfg["id"]]
             h.append((now, agg))
             while h and h[0][0] < now - self.history_window:
                 h.popleft()
+        # per-tenant series: in-flight, queued depth and running usage
+        # totals per tenant — what a per-department Grafana board plots
+        # and what billing reconciles against
+        if self.tenancy is not None:
+            tracked = self.tenancy.tracked()
+            # drop series of churned (deleted, drained) tenants, like the
+            # dead-endpoint snapshot cleanup above
+            for name in [n for n in self.tenant_history
+                         if n not in tracked]:
+                del self.tenant_history[name]
+            for name in tracked:
+                totals = self.tenancy.totals.get(name, {})
+                snap = {
+                    "inflight": self.tenancy.inflight.get(name, 0),
+                    "queued": gw_queue.tenant_depth(name) if gw_queue else 0,
+                    "weight": self.tenancy.weight(name),
+                    "requests_total": totals.get("requests", 0),
+                    "failed_total": totals.get("failed", 0),
+                    "prompt_tokens_total": totals.get("prompt_tokens", 0),
+                    "completion_tokens_total":
+                        totals.get("completion_tokens", 0),
+                    "rejected_quota_total":
+                        self.tenancy.rejections.get(name, 0),
+                }
+                h = self.tenant_history[name]
+                h.append((now, snap))
+                while h and h[0][0] < now - self.history_window:
+                    h.popleft()
 
     def series(self, config_id: int, metric: str, since: float) -> list[tuple]:
         """History samples carrying `metric` (partial gateway-queue samples
         omit engine metrics; those are skipped rather than zero-filled)."""
         return [(t, m[metric]) for t, m in self.history[config_id]
+                if t >= since and metric in m]
+
+    def tenant_series(self, tenant: str, metric: str,
+                      since: float = 0.0) -> list[tuple]:
+        """Per-tenant history samples (see scrape): `inflight`, `queued`,
+        `weight`, `requests_total`, `failed_total`, `prompt_tokens_total`,
+        `completion_tokens_total`, `rejected_quota_total`."""
+        return [(t, m[metric]) for t, m in self.tenant_history[tenant]
                 if t >= since and metric in m]
 
     # -- Grafana contact-point webhook --------------------------------------

@@ -32,6 +32,9 @@ immediately answering 461 when a model has no ready endpoint, the gateway
 may hold requests and drain them when the controller brings an instance up;
 the queue depth and the age of its head are exported to the Metrics Gateway
 so queued requests count toward the autoscaler's scale-up signal (§3.3).
+Draining is *weighted fair* across tenants (repro.core.tenancy): per-tenant
+buckets under a virtual-time scheduler whose service is measured in tokens,
+so one tenant's bulk batch cannot starve another's interactive traffic.
 """
 from __future__ import annotations
 
@@ -206,7 +209,13 @@ class SessionAffinity(RoutingPolicy):
             self.fallbacks += 1
             return self._fallback.select(eps, req)
         self._build_ring(eps)
-        h = _stable_hash(str(key))
+        # namespace the ring key by the authenticated tenant: two tenants
+        # reusing the same session id ("chat-1", a default every client
+        # library ships) must pin independently — a colliding key would
+        # let one tenant's traffic shape another's placement
+        tenant = getattr(req, "tenant", None)
+        ring_key = str(key) if tenant is None else f"{tenant}\x00{key}"
+        h = _stable_hash(ring_key)
         i = bisect.bisect_right(self._ring, h) % len(self._ring)
         self.affinity_hits += 1
         return self._ring_eps[i]
@@ -320,13 +329,32 @@ class GatewayQueue:
     feed the Metrics-Gateway scrape so the autoscaler sees queued demand
     even while a model has zero live instances.
 
-    Dequeue acts on `Request.priority`: the entry with the highest
-    *effective* priority — ``priority + aging * wait_time`` — is dispatched
-    first, FIFO within a priority class.  ``aging`` (priority points per
-    queued second, `ServiceConfig.queue_aging`) is the starvation-avoidance
-    knob: with aging > 0 a long-waiting low-priority request eventually
-    outranks fresh high-priority arrivals; at the default 0.0 ordering is
-    strict priority, and with all-zero priorities it reduces to plain FIFO.
+    **Weighted fair queuing across tenants** (``fair_queuing=True``, the
+    default): each model's queue is a set of per-tenant buckets (keyed by
+    the gateway-stamped ``Request.tenant``; untenanted requests share one
+    bucket) drained by start-time fair queuing on a per-model virtual
+    clock.  Dispatching an entry advances its tenant's virtual time by
+    ``cost / weight`` where cost is the request's *service cost in tokens*
+    (prompt + target output, `cost_fn`) — share is measured in work, not
+    request count, so a tenant of 100-token chat turns is not crowded out
+    by a tenant of 8k-token batch prompts.  A tenant that goes idle earns
+    no credit: on re-arrival its virtual time snaps forward to the queue's
+    clock.  Ties on virtual time break by `TenantSpec.priority_class`
+    (higher first, via ``class_fn``), then bucket arrival order.  With one
+    tenant (or ``fair_queuing=False``) the queue reduces exactly to the
+    PR-3 behaviour.  Admission is weighted too: an offer that finds the
+    queue full may *displace* the least-urgent entry of the most
+    over-share tenant (see `_displace`) instead of rejecting an
+    under-share tenant at the door.
+
+    *Within* a tenant, dequeue acts on `Request.priority`: the entry with
+    the highest *effective* priority — ``priority + aging * wait_time`` —
+    is dispatched first, FIFO within a priority class.  ``aging``
+    (priority points per queued second, `ServiceConfig.queue_aging`) is
+    the starvation-avoidance knob: with aging > 0 a long-waiting
+    low-priority request eventually outranks fresh high-priority
+    arrivals; at the default 0.0 ordering is strict priority, and with
+    all-zero priorities it reduces to plain FIFO.
 
     `configure_model` installs per-deployment capacity/TTL overrides (the
     `ModelDeploymentSpec.queue_capacity` / `queue_ttl` knobs): an override
@@ -334,17 +362,39 @@ class GatewayQueue:
     """
 
     def __init__(self, capacity: int = 0, ttl: float = 30.0,
-                 aging: float = 0.0):
+                 aging: float = 0.0, fair_queuing: bool = True,
+                 weight_fn: Optional[Callable] = None,
+                 class_fn: Optional[Callable] = None,
+                 cost_fn: Optional[Callable] = None):
         self.capacity = capacity
         self.ttl = ttl
         self.aging = aging
-        self._q: dict[str, deque[QueuedRequest]] = {}
+        self.fair_queuing = fair_queuing
+        # tenant name -> fair-share weight / priority class (injected by
+        # the gateway from the TenancyManager; defaults = all equal)
+        self.weight_fn = weight_fn or (lambda tenant: 1.0)
+        self.class_fn = class_fn or (lambda tenant: 0)
+        # WFQ service cost of one entry, in tokens
+        self.cost_fn = cost_fn or (lambda req: req.prompt_len
+                                   + req.target_len())
+        # model -> tenant key -> entries in arrival order
+        self._q: dict[str, OrderedDict] = {}
+        self._vt: dict[str, dict] = {}      # model -> tenant virtual time
+        self._v: dict[str, float] = {}      # model -> virtual clock floor
+        # model -> tenant -> queued token-cost total (kept in lockstep
+        # with _q; makes displacement O(tenants) instead of O(entries))
+        self._cost: dict[str, dict] = {}
         # model -> (capacity override, ttl override); None = inherit
         self._model_limits: dict[str, tuple] = {}
+        # fn(QueuedRequest), set by the gateway: receives entries evicted
+        # by weighted admission (fair-share displacement on a full queue)
+        # so their streams get a terminal 461 instead of hanging
+        self.on_displaced: Optional[Callable] = None
         self.enqueued = 0
         self.drained = 0
         self.expired = 0
         self.rejected_full = 0
+        self.displaced = 0
 
     @property
     def enabled(self) -> bool:
@@ -366,18 +416,33 @@ class GatewayQueue:
         return (self.capacity if cap is None else cap,
                 self.ttl if ttl is None else ttl)
 
+    def _buckets(self, model_name: str) -> OrderedDict:
+        return self._q.get(model_name) or OrderedDict()
+
     def total_depth(self) -> int:
-        return sum(len(q) for q in self._q.values())
+        return sum(len(b) for bs in self._q.values() for b in bs.values())
 
     def depth(self, model_name: str) -> int:
-        return len(self._q.get(model_name, ()))
+        return sum(len(b) for b in self._buckets(model_name).values())
+
+    def depth_by_tenant(self, model_name: str) -> dict:
+        """{tenant key: queued depth} for one model (non-empty buckets
+        only) — the share-weighted autoscaling signal's raw input."""
+        return {t: len(b) for t, b in self._buckets(model_name).items()
+                if b}
+
+    def tenant_depth(self, tenant) -> int:
+        """Queued entries for one tenant across all models (per-tenant
+        scrape series)."""
+        return sum(len(bs.get(tenant, ())) for bs in self._q.values())
 
     def head_age(self, model_name: str, now: float) -> float:
-        q = self._q.get(model_name)
-        return (now - q[0].enqueued_at) if q else 0.0
+        heads = [b[0].enqueued_at for b in self._buckets(model_name).values()
+                 if b]
+        return (now - min(heads)) if heads else 0.0
 
     def models(self) -> list[str]:
-        return [m for m, q in self._q.items() if q]
+        return [m for m in self._q if self.depth(m)]
 
     def offer(self, req: Request, model_name: str, now: float,
               dispatch: Callable[[Request], int]) -> bool:
@@ -389,30 +454,138 @@ class GatewayQueue:
             return False
         if cap is not None:
             full = self.depth(model_name) >= cap
+            scope = [model_name]               # per-model bound
         else:
             full = self.total_depth() >= self.capacity
-        if full:
+            scope = None                       # shared bound: all models
+        tenant = getattr(req, "tenant", None) if self.fair_queuing else None
+        if full and not self._displace(scope, tenant, req, now):
             self.rejected_full += 1
             return False
-        self._q.setdefault(model_name, deque()).append(QueuedRequest(
+        buckets = self._q.setdefault(model_name, OrderedDict())
+        bucket = buckets.get(tenant)
+        if bucket is None:
+            bucket = buckets[tenant] = deque()
+        if not bucket:
+            # (re-)backlogged: no credit for idle time — the tenant's
+            # virtual time snaps forward to the model's clock
+            vt = self._vt.setdefault(model_name, {})
+            vt[tenant] = max(vt.get(tenant, 0.0),
+                             self._v.get(model_name, 0.0))
+        bucket.append(QueuedRequest(
             req=req, model_name=model_name, enqueued_at=now,
             deadline=now + eff_ttl, dispatch=dispatch))
+        self._note_cost(model_name, tenant, req, +1)
         self.enqueued += 1
         return True
 
+    def _note_cost(self, model_name: str, tenant, req: Request, sign: int):
+        """Maintain the running queued-token total per (model, tenant) so
+        displacement decisions are O(tenants), not O(queued entries)."""
+        per_model = self._cost.setdefault(model_name, {})
+        per_model[tenant] = per_model.get(tenant, 0.0) \
+            + sign * self.cost_fn(req)
+
+    def _displace(self, scope: Optional[list], tenant, req: Request,
+                  now: float) -> bool:
+        """Weighted admission on a full queue: fairness must not stop at
+        the door.  If the offering tenant is further *under* its fair
+        share than the most over-share backlogged tenant in scope, evict
+        that tenant's least-urgent entry — lowest effective priority,
+        newest among equals — to make room; the evicted entry goes to
+        `on_displaced` for a terminal 461.  ``scope`` is the models the
+        breached bound covers: the one model for a per-deployment
+        capacity override, every queued model (None) for the shared
+        gateway bound — a full shared queue must consider other models'
+        hoards, or one model's backlog would still lock other models'
+        tenants out.  Share is measured in queued TOKENS over weight
+        (the same `cost_fn` currency the drain uses) — by count, a bulk
+        tenant of few huge requests could evict an interactive tenant
+        holding far less queued work.  Returns True when a slot was
+        freed."""
+        if not self.fair_queuing:
+            return False
+        models = list(self._q) if scope is None \
+            else [m for m in scope if m in self._q]
+        if not models:
+            return False
+
+        def ratio(t, extra_cost: float = 0.0) -> float:
+            queued = sum(self._cost.get(m, {}).get(t, 0.0) for m in models)
+            return (queued + extra_cost) / max(self.weight_fn(t), 1e-9)
+
+        backlogged = {t for m in models
+                      for t, b in self._q[m].items() if b}
+        victim_t = max(backlogged, key=ratio, default=None)
+        if victim_t is None or victim_t == tenant:
+            return False          # the offerer is itself the worst
+        if ratio(victim_t) <= ratio(tenant, extra_cost=self.cost_fn(req)):
+            return False          # admitting would not improve fairness
+        # least-urgent entry across the victim's in-scope buckets:
+        # lowest effective priority, newest (enqueue time) among equals
+        worst = None
+        for m in models:
+            for i, e in enumerate(self._q[m].get(victim_t, ())):
+                # arrival index breaks enqueue-time ties (same-tick
+                # offers): the later arrival is the newer entry
+                key = (-(e.req.priority
+                         + self.aging * (now - e.enqueued_at)),
+                       e.enqueued_at, i)
+                if worst is None or key > worst[0]:
+                    worst = (key, m, i)
+        _, m, i = worst
+        item = self._q[m][victim_t][i]
+        del self._q[m][victim_t][i]
+        self._note_cost(m, victim_t, item.req, -1)
+        self._prune(m)
+        self.displaced += 1
+        if self.on_displaced is not None:
+            self.on_displaced(item)
+        return True
+
+    def _prune(self, model_name: str):
+        """Drop drained per-tenant buckets so long-lived gateways with
+        tenant churn don't walk a growing set of empty deques on every
+        tick.  The tenant's _vt entry is kept deliberately: its virtual
+        time is the debt of work already consumed — deleting it would let
+        a tenant dodge WFQ accounting by letting its bucket drain."""
+        buckets = self._q.get(model_name)
+        if buckets is None:
+            return
+        for t in [t for t, b in buckets.items() if not b]:
+            del buckets[t]
+            self._cost.get(model_name, {}).pop(t, None)
+        if not buckets:
+            del self._q[model_name]
+            self._cost.pop(model_name, None)
+
     def expire(self, now: float) -> list[QueuedRequest]:
-        """Drop entries past their deadline (FIFO heads first)."""
+        """Drop every entry past its deadline.  The whole bucket is
+        scanned, not just the head: deadlines are NOT monotone within a
+        bucket — a `configure_model` TTL override applied mid-run (the
+        Reconciler does this on spec updates) gives later arrivals
+        earlier deadlines, and head-only expiry would strand them behind
+        a longer-deadline head, hanging their streams far past the
+        advertised retry_after."""
         out = []
-        for q in self._q.values():
-            while q and q[0].deadline <= now:
-                out.append(q.popleft())
+        for model_name, buckets in list(self._q.items()):
+            for t, b in buckets.items():
+                if any(e.deadline <= now for e in b):
+                    keep = deque(e for e in b if e.deadline > now)
+                    for item in b:
+                        if item.deadline <= now:
+                            self._note_cost(model_name, t, item.req, -1)
+                            out.append(item)
+                    buckets[t] = keep
+            self._prune(model_name)
         self.expired += len(out)
         return out
 
     def _select(self, q: deque, now: float) -> int:
-        """Index of the next entry to dispatch: highest effective priority
-        (priority + aging * wait), FIFO tie-break — entries sit in arrival
-        order and the strict `>` keeps the earliest among equals."""
+        """Index of the next entry to dispatch within one tenant bucket:
+        highest effective priority (priority + aging * wait), FIFO
+        tie-break — entries sit in arrival order and the strict `>` keeps
+        the earliest among equals."""
         best_i, best_key = 0, None
         for i, item in enumerate(q):
             key = item.req.priority + self.aging * (now - item.enqueued_at)
@@ -420,28 +593,63 @@ class GatewayQueue:
                 best_i, best_key = i, key
         return best_i
 
+    def _next_tenant(self, model_name: str):
+        """Backlogged tenant with the smallest virtual time (start-time
+        fair queuing); ties break by priority class (higher first), then
+        bucket arrival order."""
+        vt = self._vt.get(model_name, {})
+        best, best_key = None, None
+        for i, (tenant, b) in enumerate(self._q[model_name].items()):
+            if not b:
+                continue
+            key = (vt.get(tenant, 0.0), -self.class_fn(tenant), i)
+            if best_key is None or key < best_key:
+                best, best_key = tenant, key
+        return best
+
     def drain(self, model_name: str, now: float,
               can_dispatch: Callable[[str], bool]) -> int:
         """Re-dispatch queued requests for `model_name` while an endpoint
-        is ready. Returns the number forwarded."""
-        q = self._q.get(model_name)
+        is ready, in WFQ order across tenants. Returns the number
+        forwarded."""
+        if model_name not in self._q:
+            return 0
         n = 0
-        while q and can_dispatch(model_name):
-            i = self._select(q, now)
-            item = q[i]
-            del q[i]
+        while self.depth(model_name) and can_dispatch(model_name):
+            tenant = self._next_tenant(model_name)
+            bucket = self._q[model_name][tenant]
+            i = self._select(bucket, now)
+            item = bucket[i]
+            del bucket[i]
             item.attempts += 1
             status = item.dispatch(item.req)
             if status != 200:
                 # endpoint vanished between the check and the dispatch:
                 # put it back where it was and stop this pass
-                q.insert(i, item)
+                bucket.insert(i, item)
                 break
+            self._note_cost(model_name, tenant, item.req, -1)
+            vt = self._vt.setdefault(model_name, {})
+            start = max(vt.get(tenant, 0.0), self._v.get(model_name, 0.0))
+            self._v[model_name] = start
+            vt[tenant] = start + self.cost_fn(item.req) \
+                / max(self.weight_fn(tenant), 1e-9)
             n += 1
+        self._prune(model_name)
         self.drained += n
         return n
 
     def stats(self) -> dict:
-        return {"depth": self.total_depth(), "enqueued": self.enqueued,
-                "drained": self.drained, "expired": self.expired,
-                "rejected_full": self.rejected_full}
+        by_tenant: dict = {}
+        for buckets in self._q.values():
+            for t, b in buckets.items():
+                if b:
+                    key = t if t is not None else ""
+                    by_tenant[key] = by_tenant.get(key, 0) + len(b)
+        out = {"depth": self.total_depth(), "enqueued": self.enqueued,
+               "drained": self.drained, "expired": self.expired,
+               "rejected_full": self.rejected_full,
+               "displaced": self.displaced}
+        if by_tenant:
+            out["by_tenant"] = by_tenant
+        return out

@@ -7,8 +7,12 @@ request parameters; custom status codes when no ready endpoint exists.
 
 The wire contract lives in `repro.api` (see docs/api.md): `api_handle`
 returns ``(status, TokenStream, APIError | None)`` — the structured-error
-mapping of the paper's custom codes (401/422/460/461/462) with
-``retry_after`` derived from the queue TTL / scale-up cooldown.  Streaming
+mapping of the paper's custom codes (401/422/429/460/461/462) with
+``retry_after`` derived from the queue TTL / scale-up cooldown / tenant
+token-bucket refill.  Multi-tenant QoS (repro.core.tenancy, docs/
+tenancy.md) is enforced here: quota admission answers 429, the gateway
+queue drains weighted-fair across tenants, and every admitted request is
+metered into the tenant's usage records at terminal close.  Streaming
 goes through an explicit `TokenStream` session installed once per request;
 each dispatch attempt *rebinds* the per-dispatch state (router finish hook,
 response-hop delay) instead of re-wrapping `req.on_token`, so queue
@@ -27,6 +31,7 @@ comparison measures.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
@@ -45,6 +50,7 @@ OK = 200
 QUEUED = 202                 # held in the gateway queue (queuing enabled)
 UNAUTHENTICATED = 401
 VALIDATION_FAILED = 422
+TENANT_QUOTA_EXCEEDED = 429  # tenant rate limit / concurrency cap hit
 MODEL_UNKNOWN = 460          # no configuration for requested model
 MODEL_NOT_READY = 461        # configured but no ready endpoint yet
 INSTANCE_UNREACHABLE = 462   # endpoint row exists but instance is gone
@@ -66,6 +72,7 @@ class GatewayStats:
     rejected_auth: int = 0
     rejected_no_endpoint: int = 0
     rejected_admission: int = 0   # est. service time > queue TTL (461)
+    rejected_quota: int = 0       # tenant bucket / inflight cap (429)
     forwarded: int = 0
     handoffs: int = 0             # prefill->decode hops orchestrated
     disagg_retries: int = 0       # transparent re-runs after instance loss
@@ -79,7 +86,8 @@ class WebGateway:
                  latency: GatewayLatency = None, auth_cache_ttl: float = 60.0,
                  services: Optional[ServiceConfig] = None,
                  load_fn: Optional[Callable[[tuple], dict]] = None,
-                 service_estimator: Optional[Callable] = None):
+                 service_estimator: Optional[Callable] = None,
+                 tenancy=None):
         self.db = db
         self.loop = loop
         self.registry = registry                  # (node, port) -> instance
@@ -89,7 +97,17 @@ class WebGateway:
         # fn(model_name, req) -> estimated service seconds | None; feeds
         # queue admission control (ServiceConfig.admission_control)
         self.service_estimator = service_estimator
-        self._auth_cache: dict[str, tuple] = {}   # api_key -> (tenant, expiry)
+        # repro.core.tenancy.TenancyManager (duck-typed; None = no QoS):
+        # quota admission, WFQ weights, usage metering
+        self.tenancy = tenancy
+        # api_key -> (tenant row | None, expiry); bounded LRU.  Negative
+        # lookups cache too (short TTL) — a client retry-looping a bad key
+        # must not buy a full auth_db_trip per attempt
+        self._auth_cache: OrderedDict[str, tuple] = OrderedDict()
+        # negative keys currently cached, in insertion order (eviction
+        # victims); a side index so full-cache eviction is O(1), not a
+        # scan — the bad-key flood is exactly the hot path
+        self._auth_neg: OrderedDict[str, None] = OrderedDict()
         self.stats = GatewayStats()
         # per-model disaggregation profiles (two-hop prefill/decode routing)
         self._disagg: dict[str, DisaggProfile] = {}
@@ -103,8 +121,17 @@ class WebGateway:
                if svc.routing_policy == "prefix_aware" else {}))
         # per-deployment policy overrides (ModelDeploymentSpec.routing_policy)
         self._model_routers: dict[str, object] = {}
-        self.queue = GatewayQueue(capacity=svc.queue_capacity,
-                                  ttl=svc.queue_ttl, aging=svc.queue_aging)
+        self.queue = GatewayQueue(
+            capacity=svc.queue_capacity, ttl=svc.queue_ttl,
+            aging=svc.queue_aging, fair_queuing=svc.fair_queuing,
+            weight_fn=tenancy.weight if tenancy is not None else None,
+            class_fn=tenancy.priority_class if tenancy is not None else None,
+            # one service-cost currency: WFQ share and displacement use
+            # the same charge the token buckets and usage refunds bill
+            cost_fn=tenancy.charge if tenancy is not None else None)
+        # entries evicted by weighted admission get a terminal 461 (same
+        # wire shape as a queue-full rejection, delivered post-202)
+        self.queue.on_displaced = self._on_displaced
         self._tick_scheduled = False
         self._ensure_queue_tick()
 
@@ -152,15 +179,45 @@ class WebGateway:
 
     # ------------------------------------------------------------------
     def _authenticate(self, api_key: str, now: float):
-        """Returns (tenant|None, latency_added)."""
+        """Returns (tenant|None, latency_added).  Positive lookups cache
+        for `auth_cache_ttl`, negative ones for the much shorter
+        `ServiceConfig.auth_neg_ttl` (a revoked-then-reissued key must not
+        stay dead for a minute, but a bad-key retry loop must not buy a DB
+        trip per attempt); the cache is a bounded LRU
+        (`ServiceConfig.auth_cache_max`) so unique-garbage keys cannot
+        grow it without limit."""
         hit = self._auth_cache.get(api_key)
         if hit is not None and hit[1] > now:
+            self._auth_cache.move_to_end(api_key)
             self.stats.cache_hits += 1
             return hit[0], self.lat.auth_cache_hit
         self.stats.db_trips += 1
         tenant = self.db.authenticate(api_key)
-        if tenant is not None:
-            self._auth_cache[api_key] = (tenant, now + self.auth_cache_ttl)
+        ttl = self.auth_cache_ttl if tenant is not None \
+            else self.services.auth_neg_ttl
+        self._auth_cache[api_key] = (tenant, now + ttl)
+        self._auth_cache.move_to_end(api_key)
+        if tenant is None:
+            self._auth_neg[api_key] = None
+            self._auth_neg.move_to_end(api_key)
+        else:
+            self._auth_neg.pop(api_key, None)
+        while len(self._auth_cache) > self.services.auth_cache_max:
+            # eviction prefers the oldest NEGATIVE entry, then the LRU
+            # tail: a flood of unique bad keys must not flush every
+            # legitimate tenant's cached key (cache-thrash would hand the
+            # attacker exactly the per-request auth_db_trip load the
+            # negative cache exists to prevent).  Never the just-inserted
+            # key: a single bad key retry-looping against a cache full of
+            # fresh positives must keep ITS negative entry (an LRU
+            # positive goes instead), or every retry is a DB trip again.
+            victim = next((k for k in self._auth_neg if k != api_key),
+                          None)
+            if victim is None:
+                victim, _ = self._auth_cache.popitem(last=False)
+            else:
+                del self._auth_cache[victim]
+            self._auth_neg.pop(victim, None)
         return tenant, self.lat.auth_db_trip
 
     def _ready_endpoints(self, model_name: str) -> list[dict]:
@@ -220,11 +277,29 @@ class WebGateway:
             self.stats.rejected_auth += 1
             return self._reject(UNAUTHENTICATED, stream,
                                 error_for_status(UNAUTHENTICATED))
+        # the authenticated tenant rides the request: WFQ bucket key,
+        # session-affinity namespace, usage-metering account
+        req.tenant = tenant["name"]
 
         if not self.db["ai_model_configurations"].select(
                 model_name=model_name):
             return self._reject(MODEL_UNKNOWN, stream,
                                 error_for_status(MODEL_UNKNOWN))
+
+        # quota admission AFTER model validation: a typo'd model name must
+        # answer 460 without burning the tenant's token budget
+        if self.tenancy is not None:
+            quota_err = self.tenancy.admit(tenant["name"], req, now)
+            if quota_err is not None:
+                self.stats.rejected_quota += 1
+                return self._reject(TENANT_QUOTA_EXCEEDED, stream, quota_err)
+            # terminal metering: usage records + in-flight release fire
+            # exactly once, whether the request finishes, expires in the
+            # queue, or dies with its instance
+            stream.on_done(lambda s, _t=tenant["name"]:
+                           self.tenancy.on_request_done(
+                               _t, s.req, self.loop.now,
+                               failed=s.error is not None))
 
         self.stats.db_trips += 1
         status = self._route_and_forward(model_name, req, t_auth=t_auth)
@@ -392,6 +467,20 @@ class WebGateway:
             status, retry_after=self._retry_after(model_name)))
 
     # -- router-side queue --------------------------------------------------
+    def _on_displaced(self, item):
+        """A queued entry was evicted by fair-share admission (the queue
+        was full and an under-share tenant's request took its slot):
+        deliver the terminal 461 its 202 promised."""
+        item.req.status = RequestStatus.FAILED
+        self.stats.rejected_no_endpoint += 1
+        self._status(MODEL_NOT_READY)
+        TokenStream.ensure(item.req).fail(error_for_status(
+            MODEL_NOT_READY,
+            retry_after=self._retry_after(item.model_name),
+            message="Displaced from the full gateway queue by fair-share "
+                    "admission (an under-share tenant's request took the "
+                    "slot)."))
+
     def notify_ready(self, model_name: str):
         """Called by the Endpoint Worker when an instance becomes ready:
         drain queued requests for that model immediately."""

@@ -110,6 +110,40 @@ def mixed_burst(n: int, seed: int = 0, vocab: int = 32000,
     return w
 
 
+def tenant_mix(n_batch: int, n_chat: int, seed: int = 0,
+               vocab: int = 32000, shared_fraction: float = 0.9) -> tuple:
+    """Skewed two-tenant mix for the multi-tenant QoS benchmark
+    (benchmarks/tenancy.py): a *batch-heavy* tenant replaying long-prompt/
+    short-output document jobs (the bulk-summarisation cohort) and an
+    *interactive* tenant of short-prompt chat turns — the two ends of the
+    BurstGPT length distribution, split by account instead of interleaved.
+    Returns ``(batch_workload, chat_workload)``; each class shares a
+    class-level master prefix like `mixed_burst`, and both arrive
+    all-at-once (the paper's N-concurrent closed shape)."""
+    rng = np.random.default_rng(seed)
+    masters = {"batch": rng.integers(1, vocab, size=8192).tolist(),
+               "chat": rng.integers(1, vocab, size=2048).tolist()}
+
+    def make(n, master, in_mu, in_sigma, in_lo, in_hi, out_mean):
+        w = Workload()
+        for _ in range(n):
+            in_len = int(np.clip(rng.lognormal(np.log(in_mu), in_sigma),
+                                 in_lo, in_hi))
+            out_len = max(1, int(rng.gamma(2.0, out_mean / 2.0)))
+            n_shared = int(in_len * shared_fraction)
+            tail = rng.integers(1, vocab, size=in_len - n_shared).tolist()
+            w.requests.append(Request(
+                prompt_tokens=master[:n_shared] + tail,
+                sampling=SamplingParams(target_output_len=out_len,
+                                        max_new_tokens=out_len, seed=seed)))
+            w.arrivals.append(0.0)
+        return w
+
+    batch = make(n_batch, masters["batch"], 3500, 0.5, 1024, 8192, 16.0)
+    chat = make(n_chat, masters["chat"], 300, 0.8, 32, 1024, 64.0)
+    return batch, chat
+
+
 def bursty_poisson(rate: float, duration: float, seed: int = 0,
                    vocab: int = 32000, cv: float = 2.0) -> Workload:
     """Open-loop bursty arrivals (Gamma renewal process, CV>1 = bursts).

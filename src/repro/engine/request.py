@@ -137,9 +137,14 @@ class Request:
     # multi-turn chat / tenant key used by session-affinity routing; None
     # for one-shot requests (router falls back to round-robin)
     session_id: Optional[str] = None
-    # wire-level scheduling hint (per-tenant fairness, ROADMAP); carried
-    # end-to-end so later PRs can act on it without a schema change
+    # wire-level scheduling hint; orders requests WITHIN a tenant in the
+    # gateway queue (across tenants, weighted fair queuing rules — see
+    # repro.core.tenancy)
     priority: int = 0
+    # authenticated tenant, stamped by the Web Gateway after the bearer-
+    # token lookup: the WFQ bucket key, the usage-metering account and the
+    # session-affinity namespace (never client-supplied)
+    tenant: Optional[str] = None
     status: RequestStatus = RequestStatus.WAITING
     output_tokens: list = field(default_factory=list)
     metrics: RequestMetrics = field(default_factory=RequestMetrics)

@@ -52,6 +52,7 @@ def main():
     cp.add_tenant("serve", "sk-serve")
     cp.register_model(cfg)
     admin = AdminClient(cp)
+    admin.apply_tenant(name="serve", weight=1.0, max_inflight=4096)
     dep = admin.apply(model=cfg.name, replicas=args.instances,
                       max_replicas=max(8, args.instances),
                       est_load_time=45.0)
@@ -74,6 +75,7 @@ def main():
     print(f"finished {fin}/{len(wl.requests)}; gateway stats: "
           f"{cp.web_gateway.stats}")
     print(f"scale events: {cp.metrics_gateway.scale_events}")
+    print(f"tenant usage: {admin.tenant_usage('serve').to_dict()}")
 
 
 if __name__ == "__main__":

@@ -57,6 +57,7 @@ GOLDEN = {
     202: None,
     401: ("authentication_error", "invalid_api_key", False),
     422: ("invalid_request_error", "invalid_value", False),
+    429: ("rate_limit_error", "tenant_quota_exceeded", True),
     460: ("invalid_request_error", "model_not_found", False),
     461: ("service_unavailable_error", "model_not_ready", True),
     462: ("service_unavailable_error", "instance_unreachable", True),

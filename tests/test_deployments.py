@@ -343,6 +343,103 @@ def test_admin_verbs_and_watch_events():
     assert seen == []
 
 
+def test_rollback_restores_previous_spec_revision():
+    """kubectl rollout undo analogue: every applied spec change keeps the
+    outgoing revision; `rollback` re-applies it (template changes roll
+    back through the same surge/drain machinery), and a second rollback
+    returns to where you started."""
+    cp, admin = mk_admin()
+    admin.apply(model=MODEL, replicas=1, max_replicas=3, model_version="1",
+                est_load_time=5.0)
+    assert admin.wait(MODEL, "Ready", timeout=120.0)
+    # template change: v1 -> v2 rolls the replica
+    admin.apply(model=MODEL, replicas=1, max_replicas=3, model_version="2",
+                est_load_time=5.0)
+    assert admin.wait(MODEL, "Ready", timeout=240.0)
+    cp.run_until(cp.loop.now + 30.0)     # let the worker reap dead rows
+    dep = admin.get(MODEL)
+    assert dep.spec.model_version == "2"
+    assert dep.template_generation == 2
+    eps = cp.ready_endpoints(MODEL)
+    assert eps and all(e["model_version"] == "2" for e in eps)
+
+    gen0 = dep.generation
+    admin.rollback(MODEL)
+    assert dep.spec.model_version == "1"
+    assert dep.generation == gen0 + 1
+    assert dep.template_generation == 3          # rolls forward, not back
+    assert admin.wait(MODEL, "Ready", timeout=240.0)
+    cp.run_until(cp.loop.now + 30.0)
+    eps = cp.ready_endpoints(MODEL)
+    assert eps and all(e["model_version"] == "1" for e in eps)
+
+    # undo the undo: back on v2
+    admin.rollback(MODEL)
+    assert dep.spec.model_version == "2"
+    assert admin.wait(MODEL, "Ready", timeout=240.0)
+
+
+def test_rollback_without_history_is_422():
+    cp, admin = mk_admin()
+    admin.apply(model=MODEL, replicas=1, est_load_time=5.0)
+    with pytest.raises(APIStatusError) as ei:
+        admin.rollback(MODEL)
+    assert ei.value.status == 422 and ei.value.error.param == "name"
+    with pytest.raises(APIStatusError):
+        admin.rollback("no-such-deployment")
+
+
+def test_rollback_revisions_are_snapshots_not_references():
+    """Autoscaler patches mutate dep.spec in place; the revision history
+    must hold copies, or a rollback would 'restore' the mutated state."""
+    cp, admin = mk_admin()
+    dep = admin.apply(model=MODEL, replicas=1, max_replicas=4,
+                      est_load_time=5.0)
+    admin.apply(model=MODEL, replicas=1, max_replicas=4, est_load_time=5.0,
+                queue_capacity=8)
+    # autoscaler-style in-place patch on the live spec
+    cp.reconciler.patch_replicas(dep.config_id, +2)
+    assert dep.spec.replicas == 3
+    assert dep.revisions[-1].replicas == 1       # snapshot untouched
+    admin.rollback(MODEL)
+    assert dep.spec.queue_capacity is None
+    assert dep.spec.replicas == 1
+
+
+def test_rollback_skips_revisions_identical_to_drifted_spec():
+    """In-place autoscaler drift can make the newest snapshot equal the
+    live spec; rollback must not 'restore' it (a silent no-op that
+    destroys the revision) — it skips to the newest distinct one, or
+    422s with history intact when none differs."""
+    cp, admin = mk_admin()
+    dep = admin.apply(model=MODEL, replicas=1, max_replicas=4,
+                      est_load_time=5.0)
+    admin.apply(model=MODEL, replicas=3, max_replicas=4, est_load_time=5.0)
+    # drift the live spec back to the snapshot's state (no revision push)
+    cp.reconciler.patch_replicas(dep.config_id, -2)
+    assert dep.spec.replicas == 1 and dep.revisions[-1] == dep.spec
+    with pytest.raises(APIStatusError) as ei:
+        admin.rollback(MODEL)
+    assert "differing" in ei.value.error.message
+    assert len(dep.revisions) == 1           # history NOT destroyed
+    # with an older distinct revision, rollback lands there instead
+    admin.apply(model=MODEL, replicas=3, max_replicas=4, est_load_time=5.0,
+                queue_capacity=9)
+    cp.reconciler.patch_replicas(dep.config_id, -2)
+    admin.rollback(MODEL)
+    assert dep.spec.queue_capacity is None and dep.spec.replicas == 1
+
+
+def test_rollback_history_is_bounded():
+    from repro.core.deployments import MAX_REVISIONS
+    cp, admin = mk_admin()
+    for i in range(MAX_REVISIONS + 5):
+        admin.apply(model=MODEL, replicas=1, max_replicas=4,
+                    est_load_time=5.0, queue_capacity=i + 1)
+    dep = admin.get(MODEL)
+    assert len(dep.revisions) == MAX_REVISIONS
+
+
 def test_watch_is_a_stream_session():
     # the watch reuses the TokenStream subscription machinery
     from repro.api.streaming import StreamSession

@@ -1,0 +1,767 @@
+"""Multi-tenant QoS subsystem (repro.core.tenancy, docs/tenancy.md):
+TenantSpec validation + manifests + DB persistence, TokenBucket math,
+quota admission through `WebGateway.api_handle` (the 429 wire error with
+bucket-derived retry_after), weighted fair queuing across tenants in the
+GatewayQueue (token-cost virtual time, per-tenant priority/aging
+preserved), usage metering that reconciles with the engines'
+RequestMetrics, the per-tenant Metrics-Gateway series, the share-weighted
+TENANT_QUEUE_SCALE_UP rule, the AdminClient tenant verbs, and the
+hardened (bounded + negative-caching) gateway auth cache.
+
+CI runs this file in the isolated-first slot (see .github/workflows)."""
+import pytest
+
+from repro import configs
+from repro.api import AdminClient, APIStatusError, ServingClient, TenantUsage
+from repro.config import ServiceConfig
+from repro.core.autoscaler import TENANT_QUEUE_SCALE_UP
+from repro.core.controller import ClusterSpec, ControlPlane
+from repro.core.router import GatewayQueue
+from repro.core.tenancy import TenancyManager, TenantSpec, TokenBucket
+from repro.core.web_gateway import (MODEL_NOT_READY, OK, QUEUED,
+                                    TENANT_QUOTA_EXCEEDED)
+from repro.engine.request import Request, SamplingParams
+
+MODEL = "mistral-small-24b"
+
+
+def mk_plane(services=None, alert_rules=None, **kw):
+    spec = ClusterSpec(num_nodes=kw.pop("num_nodes", 4),
+                       gpus_per_node=kw.pop("gpus_per_node", 2),
+                       max_num_seqs=16, num_blocks=512, block_size=16,
+                       max_model_len=2048,
+                       services=services or ServiceConfig(), **kw)
+    cp = ControlPlane(spec, alert_rules=alert_rules)
+    cp.add_tenant("uni", "sk-test")
+    return cp
+
+
+def ready_plane(services=None, **kw):
+    cp = mk_plane(services=services, **kw)
+    cp.add_model(configs.get(MODEL), instances=1, est_load_time=10.0)
+    cp.run_until(60.0)
+    assert cp.ready_endpoints(MODEL)
+    return cp
+
+
+def req(n=16, out=4, tenant=None, priority=0):
+    r = Request(prompt_tokens=[1] * n, priority=priority,
+                sampling=SamplingParams(target_output_len=out,
+                                        max_new_tokens=out))
+    r.tenant = tenant
+    return r
+
+
+# ---------------------------------------------------------------------------
+# TenantSpec validation + manifests
+# ---------------------------------------------------------------------------
+
+def test_tenant_spec_roundtrip():
+    spec = TenantSpec(name="uni", weight=2.5, requests_per_sec=10.0,
+                      tokens_per_min=60_000.0, burst_requests=20,
+                      burst_tokens=90_000, max_inflight=64,
+                      priority_class=1)
+    spec.validate()
+    assert TenantSpec.from_dict(spec.to_dict()) == spec
+
+
+@pytest.mark.parametrize("field,value", [
+    ("name", ""), ("name", 7), ("weight", 0.0), ("weight", -1.0),
+    ("weight", "2"), ("requests_per_sec", 0.0), ("tokens_per_min", -5.0),
+    ("burst_requests", 0), ("burst_tokens", 1.5), ("max_inflight", 0),
+    ("priority_class", 0.5),
+])
+def test_tenant_spec_validation_is_field_addressed(field, value):
+    spec = TenantSpec(name="uni", requests_per_sec=1.0, tokens_per_min=60.0)
+    setattr(spec, field, value)
+    with pytest.raises(APIStatusError) as ei:
+        spec.validate()
+    assert ei.value.status == 422
+    assert ei.value.error.param == field
+
+
+def test_tenant_spec_burst_requires_rate():
+    with pytest.raises(APIStatusError) as ei:
+        TenantSpec(name="uni", burst_requests=5).validate()
+    assert ei.value.error.param == "burst_requests"
+
+
+def test_tenant_spec_rejects_unknown_manifest_fields():
+    with pytest.raises(APIStatusError) as ei:
+        TenantSpec.from_dict({"name": "uni", "rate_limit": 5})
+    assert ei.value.status == 422
+    assert ei.value.error.param == "rate_limit"
+
+
+# ---------------------------------------------------------------------------
+# TokenBucket
+# ---------------------------------------------------------------------------
+
+def test_token_bucket_starts_full_and_refills():
+    b = TokenBucket(rate=2.0, capacity=4.0)
+    assert b.wait_for(4.0, 0.0) == 0.0
+    b.take(4.0, 0.0)
+    # empty: 3 tokens need 1.5 s at 2 tokens/s
+    assert b.wait_for(3.0, 0.0) == pytest.approx(1.5)
+    assert b.wait_for(3.0, 1.0) == pytest.approx(0.5)
+    assert b.wait_for(3.0, 2.0) == 0.0
+    # level never exceeds capacity
+    assert b.wait_for(4.0, 100.0) == 0.0
+    assert b.wait_for(4.1, 100.0) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# TenancyManager: persistence + admission
+# ---------------------------------------------------------------------------
+
+def test_apply_requires_existing_tenant_row():
+    cp = mk_plane()
+    with pytest.raises(APIStatusError) as ei:
+        cp.tenancy.apply(TenantSpec(name="ghost"))
+    assert ei.value.status == 422 and ei.value.error.param == "name"
+
+
+def test_specs_persist_in_db_and_reload():
+    cp = mk_plane()
+    cp.tenancy.apply(TenantSpec(name="uni", weight=3.0,
+                                requests_per_sec=5.0, max_inflight=8))
+    rows = cp.db["identity_tenant_policies"].select()
+    assert len(rows) == 1 and rows[0]["weight"] == 3.0
+    # a fresh manager over the same DB picks the policy up
+    fresh = TenancyManager(cp.db, cp.loop)
+    assert fresh.get("uni").max_inflight == 8
+    assert fresh.weight("uni") == 3.0
+    # re-apply updates in place (still one row); delete drops it
+    cp.tenancy.apply(TenantSpec(name="uni", weight=1.5))
+    assert len(cp.db["identity_tenant_policies"].select()) == 1
+    assert cp.tenancy.weight("uni") == 1.5
+    assert cp.tenancy.delete("uni")
+    assert not cp.db["identity_tenant_policies"].select()
+    assert cp.tenancy.weight("uni") == 1.0          # back to default
+
+
+def test_unknown_tenant_defaults_are_unlimited():
+    cp = ready_plane()
+    for _ in range(20):
+        assert cp.web_gateway.handle("sk-test", MODEL, req(out=1)) == OK
+
+
+def test_requests_per_sec_bucket_429_with_refill_retry_after():
+    cp = ready_plane()
+    cp.tenancy.apply(TenantSpec(name="uni", requests_per_sec=0.5,
+                                burst_requests=1))
+    assert cp.web_gateway.handle("sk-test", MODEL, req()) == OK
+    status, stream, err = cp.web_gateway.api_handle("sk-test", MODEL, req())
+    assert status == TENANT_QUOTA_EXCEEDED == 429
+    assert err.type == "rate_limit_error"
+    assert err.code == "tenant_quota_exceeded"
+    assert err.retry_after == pytest.approx(2.0)    # 1 token at 0.5/s
+    assert stream.closed and stream.error is err
+    assert cp.web_gateway.stats.rejected_quota == 1
+    assert cp.tenancy.rejections["uni"] == 1
+    # the bucket refills on the virtual clock
+    cp.run_until(cp.loop.now + 2.5)
+    assert cp.web_gateway.handle("sk-test", MODEL, req()) == OK
+
+
+def test_tokens_per_min_bucket_charges_prompt_plus_target():
+    cp = ready_plane()
+    cp.tenancy.apply(TenantSpec(name="uni", tokens_per_min=600.0,
+                                burst_tokens=100))
+    # charge = 64 prompt + 32 target = 96 <= 100 -> admitted
+    assert cp.web_gateway.handle("sk-test", MODEL, req(n=64, out=32)) == OK
+    # bucket nearly empty: the next 96-token request must wait for refill
+    status, _, err = cp.web_gateway.api_handle("sk-test", MODEL,
+                                               req(n=64, out=32))
+    assert status == 429
+    assert "tokens/min" in err.message
+    # 600 tokens/min = 10/s; ~92 tokens short -> ~9.2 s
+    assert 8.0 < err.retry_after < 10.0
+
+
+def test_oversized_charge_rejected_without_retry_after():
+    """A request whose token charge exceeds the burst capacity can NEVER
+    be admitted — the 429 must not carry a retry_after hint that would
+    send the client into an honest-looking retry loop."""
+    cp = ready_plane()
+    cp.tenancy.apply(TenantSpec(name="uni", tokens_per_min=1200.0))
+    status, _, err = cp.web_gateway.api_handle("sk-test", MODEL,
+                                               req(n=1400, out=100))
+    assert status == 429
+    assert err.retry_after is None
+    assert "never" in err.message
+    # and the bucket was not drawn: a fitting request still passes
+    assert cp.web_gateway.handle("sk-test", MODEL, req(n=16, out=4)) == OK
+
+
+def test_unknown_model_is_460_and_burns_no_quota():
+    """Quota admission runs AFTER model validation: a typo'd model name
+    answers 460 without consuming the tenant's buckets or appearing in
+    its usage records."""
+    cp = ready_plane()
+    cp.tenancy.apply(TenantSpec(name="uni", tokens_per_min=6000.0))
+    level0 = cp.tenancy._tok_buckets["uni"].level
+    status, _, _ = cp.web_gateway.api_handle("sk-test", "no-such-model",
+                                             req(n=1000, out=16))
+    assert status == 460
+    assert cp.tenancy._tok_buckets["uni"].level == level0
+    assert cp.tenancy.usage("uni").requests == 0
+    assert cp.web_gateway.stats.rejected_quota == 0
+
+
+def test_never_served_requests_bill_zero_tokens_and_refund_charge():
+    """An admitted request that never reaches an engine (461, queuing
+    disabled) counts as failed but bills zero tokens, and its admission
+    charge flows back into the token bucket — quota measures work, and
+    no work happened."""
+    cp = mk_plane()
+    cp.add_model(configs.get(MODEL), instances=1, est_load_time=500.0)
+    cp.tenancy.apply(TenantSpec(name="uni", tokens_per_min=6000.0))
+    level0 = cp.tenancy._tok_buckets["uni"].level
+    status, _, _ = cp.web_gateway.api_handle("sk-test", MODEL,
+                                             req(n=100, out=16))
+    assert status == MODEL_NOT_READY
+    u = cp.tenancy.usage("uni")
+    assert u.requests == 1 and u.failed == 1
+    assert u.prompt_tokens == 0 and u.completion_tokens == 0
+    assert cp.tenancy._tok_buckets["uni"].level == level0   # refunded
+
+
+def test_max_inflight_released_on_finish():
+    cp = ready_plane()
+    cp.tenancy.apply(TenantSpec(name="uni", max_inflight=1))
+    r1 = req(out=400)                       # long-running
+    assert cp.web_gateway.handle("sk-test", MODEL, r1) == OK
+    status, _, err = cp.web_gateway.api_handle("sk-test", MODEL, req())
+    assert status == 429 and "max_inflight" in err.message
+    cp.run_until(cp.loop.now + 60.0)        # r1 finishes
+    assert r1.status.value == "finished"
+    assert cp.tenancy.inflight["uni"] == 0
+    assert cp.web_gateway.handle("sk-test", MODEL, req()) == OK
+
+
+def test_rejection_draws_nothing():
+    cp = ready_plane()
+    cp.tenancy.apply(TenantSpec(name="uni", requests_per_sec=10.0,
+                                tokens_per_min=600.0, burst_tokens=100))
+    # token bucket rejects; the request bucket must not have been drawn
+    level0 = cp.tenancy._req_buckets["uni"].level
+    status, _, _ = cp.web_gateway.api_handle("sk-test", MODEL,
+                                             req(n=200, out=32))
+    assert status == 429
+    assert cp.tenancy._req_buckets["uni"].level == level0
+    assert cp.tenancy.inflight.get("uni", 0) == 0
+
+
+# ---------------------------------------------------------------------------
+# weighted fair queuing across tenants (GatewayQueue)
+# ---------------------------------------------------------------------------
+
+def drain_order(q, model=MODEL, now=100.0, limit=64):
+    order = []
+    q.drain(model, now,
+            can_dispatch=lambda m: len(order) < limit)
+    return order
+
+
+def wfq_queue(weights=None, classes=None, cost=None, **kw):
+    w = weights or {}
+    c = classes or {}
+    return GatewayQueue(capacity=64, ttl=1e6,
+                        weight_fn=lambda t: w.get(t, 1.0),
+                        class_fn=lambda t: c.get(t, 0),
+                        cost_fn=cost, **kw)
+
+
+def offer_all(q, entries, order):
+    for i, r in enumerate(entries):
+        assert q.offer(r, MODEL, float(i) * 1e-3,
+                       dispatch=lambda rr: (order.append(rr.tenant), 200)[1])
+
+
+def test_wfq_equal_weights_alternate():
+    q = wfq_queue(cost=lambda r: 1.0)
+    order = []
+    offer_all(q, [req(tenant="a") for _ in range(3)]
+              + [req(tenant="b") for _ in range(3)], order)
+    q.drain(MODEL, 1.0, can_dispatch=lambda m: True)
+    assert order == ["a", "b", "a", "b", "a", "b"]
+
+
+def test_wfq_respects_weights():
+    q = wfq_queue(weights={"a": 3.0, "b": 1.0}, cost=lambda r: 1.0)
+    order = []
+    offer_all(q, [req(tenant="a") for _ in range(6)]
+              + [req(tenant="b") for _ in range(6)], order)
+    q.drain(MODEL, 1.0, can_dispatch=lambda m: True)
+    # over the first 8 dispatches a 3:1 share
+    assert order[:8].count("a") == 6 and order[:8].count("b") == 2
+
+
+def test_wfq_share_is_token_cost_not_request_count():
+    """A batch tenant of 10x-sized requests gets 10x fewer dispatches at
+    equal weight: service share is measured in work."""
+    q = wfq_queue()           # default cost: prompt + target tokens
+    order = []
+    batch = [req(n=96, out=4, tenant="batch") for _ in range(4)]   # 100 tok
+    chat = [req(n=6, out=4, tenant="chat") for _ in range(30)]     # 10 tok
+    offer_all(q, batch + chat, order)
+    q.drain(MODEL, 1.0, can_dispatch=lambda m: True)
+    # between consecutive batch dispatches, ~10 chat requests pass
+    first, second = order.index("batch"), \
+        order.index("batch", order.index("batch") + 1)
+    assert order[first + 1:second].count("chat") == 10
+
+
+def test_wfq_idle_tenant_earns_no_credit():
+    q = wfq_queue(cost=lambda r: 1.0)
+    order = []
+    offer_all(q, [req(tenant="a") for _ in range(10)], order)
+    # a drains alone for a while ...
+    q.drain(MODEL, 1.0, can_dispatch=lambda m: len(order) < 4)
+    assert order == ["a"] * 4
+    # ... then b arrives: it gets fair service from NOW on, not a burst
+    # of back-credit for its idle past
+    for i in range(6):
+        q.offer(req(tenant="b"), MODEL, 2.0,
+                dispatch=lambda rr: (order.append(rr.tenant), 200)[1])
+    q.drain(MODEL, 3.0, can_dispatch=lambda m: len(order) < 12)
+    tail = order[4:]
+    assert tail.count("a") == 4 and tail.count("b") == 4
+
+
+def test_wfq_priority_and_fifo_preserved_within_tenant():
+    q = wfq_queue(cost=lambda r: 1.0)
+    seen = []
+    rs = [req(tenant="a", priority=0), req(tenant="a", priority=5),
+          req(tenant="a", priority=5), req(tenant="b", priority=9)]
+    for i, r in enumerate(rs):
+        q.offer(r, MODEL, float(i),
+                dispatch=lambda rr: (seen.append(rr), 200)[1])
+    q.drain(MODEL, 10.0, can_dispatch=lambda m: True)
+    # across tenants: WFQ (a, b, a, a), NOT global priority (b first);
+    # within a: priority 5 first, FIFO between the two fives
+    assert [r.tenant for r in seen] == ["a", "b", "a", "a"]
+    a_order = [r for r in seen if r.tenant == "a"]
+    assert [r.priority for r in a_order] == [5, 5, 0]
+    assert a_order[0] is rs[1] and a_order[1] is rs[2]
+
+
+def test_wfq_aging_still_honoured_within_tenant():
+    q = wfq_queue(cost=lambda r: 1.0)
+    q.aging = 1.0
+    seen = []
+    old_low = req(tenant="a", priority=0)
+    q.offer(old_low, MODEL, 0.0,
+            dispatch=lambda rr: (seen.append(rr), 200)[1])
+    q.offer(req(tenant="a", priority=5), MODEL, 10.0,
+            dispatch=lambda rr: (seen.append(rr), 200)[1])
+    # at t=20 the aged zero outranks the fresh five: 0 + 20 > 5 + 10
+    q.drain(MODEL, 20.0, can_dispatch=lambda m: True)
+    assert seen[0] is old_low
+
+
+def test_wfq_priority_class_breaks_virtual_time_ties():
+    q = wfq_queue(classes={"vip": 2}, cost=lambda r: 1.0)
+    order = []
+    offer_all(q, [req(tenant="a"), req(tenant="vip")], order)
+    q.drain(MODEL, 1.0, can_dispatch=lambda m: True)
+    assert order == ["vip", "a"]      # despite a's earlier bucket
+
+
+def test_fair_queuing_off_restores_single_fifo():
+    q = wfq_queue(fair_queuing=False, cost=lambda r: 1.0)
+    order = []
+    offer_all(q, [req(tenant="a"), req(tenant="b"), req(tenant="a")], order)
+    q.drain(MODEL, 1.0, can_dispatch=lambda m: True)
+    assert order == ["a", "b", "a"]   # pure arrival order
+
+
+def test_wfq_depth_and_expiry_span_buckets():
+    q = GatewayQueue(capacity=8, ttl=10.0)
+    q.offer(req(tenant="a"), MODEL, 0.0, dispatch=lambda r: 200)
+    q.offer(req(tenant="b"), MODEL, 5.0, dispatch=lambda r: 200)
+    assert q.depth(MODEL) == 2
+    assert q.depth_by_tenant(MODEL) == {"a": 1, "b": 1}
+    assert q.tenant_depth("a") == 1
+    assert q.head_age(MODEL, 6.0) == 6.0          # oldest across buckets
+    assert q.stats()["by_tenant"] == {"a": 1, "b": 1}
+    expired = q.expire(10.5)                      # only a's entry is past
+    assert len(expired) == 1 and expired[0].req.tenant == "a"
+    assert q.depth_by_tenant(MODEL) == {"b": 1}
+
+
+def test_full_queue_displaces_over_share_tenant():
+    """Fairness must not stop at the door: with the queue filled by one
+    tenant, an under-share tenant's offer evicts the hog's least-urgent
+    entry instead of bouncing 461 — and the displaced entry surfaces via
+    on_displaced."""
+    q = wfq_queue(cost=lambda r: 1.0)
+    q.capacity = 4
+    dropped = []
+    q.on_displaced = dropped.append
+    rs = [req(tenant="batch", priority=(1 if i == 2 else 0))
+          for i in range(4)]
+    for i, r in enumerate(rs):
+        assert q.offer(r, MODEL, float(i), dispatch=lambda rr: 200)
+    # chat (depth 0) vs batch (depth 4, equal weight): displace
+    assert q.offer(req(tenant="chat"), MODEL, 5.0, dispatch=lambda rr: 200)
+    assert q.depth_by_tenant(MODEL) == {"batch": 3, "chat": 1}
+    assert q.displaced == 1 and len(dropped) == 1
+    # victim = lowest effective priority, newest among equals: rs[3]
+    # (rs[2] has priority 1; rs[0]/rs[1]/rs[3] tie at 0, newest wins)
+    assert dropped[0].req is rs[3]
+    # batch offering into its own over-share full queue still bounces
+    assert not q.offer(req(tenant="batch"), MODEL, 6.0,
+                       dispatch=lambda rr: 200)
+    assert q.rejected_full == 1
+    # chat keeps its slot: batch cannot displace an under-share tenant
+    assert q.depth_by_tenant(MODEL) == {"batch": 3, "chat": 1}
+
+
+def test_shared_capacity_displaces_across_models():
+    """With the shared gateway bound breached by one model's hoard, an
+    under-share tenant offering for a DIFFERENT model must still get in:
+    displacement scans every queued model, not just the offered one."""
+    q = wfq_queue(cost=lambda r: 1.0)
+    q.capacity = 3
+    dropped = []
+    q.on_displaced = dropped.append
+    for i in range(3):
+        assert q.offer(req(tenant="batch"), "model-a", float(i),
+                       dispatch=lambda rr: 200)
+    assert q.offer(req(tenant="chat"), "model-b", 3.0,
+                   dispatch=lambda rr: 200)
+    assert q.depth("model-b") == 1 and q.depth("model-a") == 2
+    assert len(dropped) == 1 and dropped[0].model_name == "model-a"
+    # a per-model override keeps its bound model-local: chat (weight 2,
+    # under-share) displaces within model-b only, never model-a's entry
+    q2 = wfq_queue(weights={"chat": 2.0}, cost=lambda r: 1.0)
+    q2.capacity = 64
+    q2.configure_model("model-b", capacity=1, ttl=60.0)
+    assert q2.offer(req(tenant="batch"), "model-a", 0.0,
+                    dispatch=lambda rr: 200)
+    assert q2.offer(req(tenant="batch"), "model-b", 1.0,
+                    dispatch=lambda rr: 200)
+    assert q2.offer(req(tenant="chat"), "model-b", 2.0,
+                    dispatch=lambda rr: 200)       # displaces within b
+    assert q2.depth("model-a") == 1
+    assert q2.depth_by_tenant("model-b") == {"chat": 1}
+
+
+def test_displacement_share_is_token_cost_not_request_count():
+    """Displacement uses the same token-cost currency as the drain: a
+    bulk tenant holding few HUGE requests (more queued work) must not
+    evict an interactive tenant holding many small ones."""
+    q = wfq_queue()                   # default cost: prompt + target
+    q.capacity = 6
+    dropped = []
+    q.on_displaced = dropped.append
+    for i in range(5):                # chat: 5 x 10 tokens = 50
+        assert q.offer(req(n=6, out=4, tenant="chat"), MODEL, float(i),
+                       dispatch=lambda rr: 200)
+    assert q.offer(req(n=96, out=4, tenant="batch"), MODEL, 5.0,
+                   dispatch=lambda rr: 200)      # batch: 100 tokens
+    # full; batch (100 tokens) offers another huge job against chat (50):
+    # batch is the over-share tenant BY TOKENS despite fewer requests
+    assert not q.offer(req(n=96, out=4, tenant="batch"), MODEL, 6.0,
+                       dispatch=lambda rr: 200)
+    assert q.rejected_full == 1 and not dropped
+    # while chat can still displace batch's entry
+    assert q.offer(req(n=6, out=4, tenant="chat"), MODEL, 7.0,
+                   dispatch=lambda rr: 200)
+    assert len(dropped) == 1 and dropped[0].req.tenant == "batch"
+
+
+def test_displaced_request_gets_terminal_461_through_gateway():
+    svc = ServiceConfig(queue_capacity=2, queue_ttl=300.0)
+    cp = mk_plane(services=svc)
+    cp.add_tenant("batch", "sk-batch")
+    cp.add_model(configs.get(MODEL), instances=1, est_load_time=500.0)
+    b1, b2 = req(), req()
+    assert cp.web_gateway.handle("sk-batch", MODEL, b1) == QUEUED
+    assert cp.web_gateway.handle("sk-batch", MODEL, b2) == QUEUED
+    # queue full; the under-share tenant displaces batch's newest entry
+    assert cp.web_gateway.handle("sk-test", MODEL, req()) == QUEUED
+    assert b2.status.value == "failed"
+    from repro.api.streaming import TokenStream
+    s = TokenStream.ensure(b2)
+    assert s.closed and s.error.http_status == 461
+    assert "Displaced" in s.error.message
+    # the displaced admitted request was metered (failed, zero tokens)
+    assert cp.tenancy.usage("batch").failed == 1
+
+
+def test_wfq_prunes_drained_buckets_but_keeps_virtual_debt():
+    """Tenant churn must not grow the queue structures forever — drained
+    buckets are pruned — while a tenant's virtual time survives so it
+    cannot dodge WFQ accounting by letting its bucket empty."""
+    q = wfq_queue(cost=lambda r: 1.0)
+    order = []
+    offer_all(q, [req(tenant="a") for _ in range(3)], order)
+    q.drain(MODEL, 1.0, can_dispatch=lambda m: True)
+    assert MODEL not in q._q                    # fully pruned
+    assert q._vt[MODEL]["a"] == 3.0             # the debt remains
+    # expiry prunes too
+    q.offer(req(tenant="b"), MODEL, 0.0, dispatch=lambda r: 200)
+    q.expire(1e7)
+    assert MODEL not in q._q
+
+
+def test_expiry_handles_non_monotone_deadlines_after_ttl_override():
+    """A mid-run queue_ttl override (Reconciler spec update) gives later
+    arrivals EARLIER deadlines; expiry must not strand them behind a
+    longer-deadline head."""
+    q = GatewayQueue(capacity=8, ttl=300.0)
+    q.offer(req(tenant="a"), MODEL, 0.0, dispatch=lambda r: 200)
+    q.configure_model(MODEL, capacity=8, ttl=5.0)
+    q.offer(req(tenant="a"), MODEL, 1.0, dispatch=lambda r: 200)  # dl 6.0
+    expired = q.expire(10.0)
+    assert len(expired) == 1 and expired[0].enqueued_at == 1.0
+    assert q.depth(MODEL) == 1            # the 300 s head survives
+
+
+def test_deleted_tenants_leave_the_scrape():
+    """Tenant churn: after delete, the tenant drops out of tracked() and
+    the Metrics Gateway stops scraping (and drops) its series."""
+    cp = ready_plane()
+    client = ServingClient(cp, api_key="sk-test")
+    client.completions(model=MODEL, prompt=[1] * 8, max_tokens=2,
+                       target_output_len=2).result()
+    cp.run_until(cp.loop.now + 10.0)
+    assert cp.metrics_gateway.tenant_series("uni", "requests_total")
+    cp.tenancy.apply(TenantSpec(name="uni"))
+    cp.tenancy.delete("uni")
+    assert "uni" not in cp.tenancy.tracked()
+    cp.run_until(cp.loop.now + 10.0)
+    assert not cp.metrics_gateway.tenant_history.get("uni")
+
+
+def test_delete_with_inflight_reaps_after_last_request_closes():
+    """Deleting a tenant mid-flight must not leave a permanent ghost:
+    the in-memory accounting is reaped when the last request closes."""
+    cp = ready_plane()
+    r = Request(prompt_tokens=[1] * 16,
+                sampling=SamplingParams(target_output_len=200,
+                                        max_new_tokens=200))
+    assert cp.web_gateway.handle("sk-test", MODEL, r) == OK
+    cp.tenancy.apply(TenantSpec(name="uni"))
+    cp.tenancy.delete("uni")
+    assert cp.tenancy.inflight["uni"] == 1      # live count kept
+    assert "uni" in cp.tenancy.tracked()
+    cp.run_until(cp.loop.now + 60.0)            # request finishes
+    assert r.status.value == "finished"
+    assert "uni" not in cp.tenancy.tracked()    # ghost reaped
+    assert "uni" not in cp.tenancy.inflight
+
+
+def test_wfq_failed_dispatch_puts_entry_back():
+    q = wfq_queue(cost=lambda r: 1.0)
+    calls = []
+    q.offer(req(tenant="a"), MODEL, 0.0,
+            dispatch=lambda r: (calls.append(r), 461)[1])
+    assert q.drain(MODEL, 1.0, can_dispatch=lambda m: True) == 0
+    assert q.depth_by_tenant(MODEL) == {"a": 1}
+    assert len(calls) == 1
+
+
+# ---------------------------------------------------------------------------
+# usage metering + reconciliation
+# ---------------------------------------------------------------------------
+
+def test_usage_reconciles_with_engine_request_metrics():
+    cp = ready_plane()
+    client = ServingClient(cp, api_key="sk-test")
+    pends = [client.completions(model=MODEL, prompt=[1] * 16, max_tokens=4,
+                                target_output_len=4) for _ in range(3)]
+    for p in pends:
+        p.result()
+    u = cp.tenancy.usage("uni")
+    assert isinstance(u, TenantUsage)
+    assert u.requests == 3 and u.failed == 0
+    assert u.prompt_tokens == sum(p.request.metrics.prompt_tokens
+                                  for p in pends) == 48
+    assert u.completion_tokens == sum(p.request.metrics.completion_tokens
+                                      for p in pends) == 12
+    assert u.total_tokens == 60
+    # wire round-trip
+    assert TenantUsage.from_dict(u.to_dict()).completion_tokens == 12
+    # windowed DB rows carry the same totals
+    recs = cp.tenancy.usage_records("uni", model=MODEL)
+    assert sum(r["requests"] for r in recs) == 3
+
+
+def test_queue_expiry_metered_as_failed():
+    svc = ServiceConfig(queue_capacity=4, queue_ttl=10.0)
+    cp = mk_plane(services=svc)
+    cp.add_model(configs.get(MODEL), instances=1, est_load_time=500.0)
+    assert cp.web_gateway.handle("sk-test", MODEL, req()) == QUEUED
+    assert cp.tenancy.inflight["uni"] == 1
+    cp.run_until(30.0)
+    u = cp.tenancy.usage("uni")
+    assert u.requests == 1 and u.failed == 1 and u.completion_tokens == 0
+    assert u.queue_wait > 0.0
+    assert cp.tenancy.inflight["uni"] == 0        # slot released
+
+
+# ---------------------------------------------------------------------------
+# per-tenant scrape series + share-weighted autoscaling
+# ---------------------------------------------------------------------------
+
+def test_metrics_gateway_exports_tenant_series():
+    cp = ready_plane()
+    client = ServingClient(cp, api_key="sk-test")
+    client.completions(model=MODEL, prompt=[1] * 16, max_tokens=2,
+                       target_output_len=2).result()
+    cp.run_until(cp.loop.now + 10.0)              # let a scrape run
+    series = cp.metrics_gateway.tenant_series("uni", "requests_total")
+    assert series and series[-1][1] == 1
+    assert cp.metrics_gateway.tenant_series("uni", "completion_tokens_total")[-1][1] == 2
+    assert cp.metrics_gateway.tenant_series("uni", "weight")[-1][1] == 1.0
+
+
+def test_tenant_weighted_queue_rule_scales_up_under_contention():
+    svc = ServiceConfig(queue_capacity=32, queue_ttl=600.0)
+    cp = mk_plane(services=svc, alert_rules=[TENANT_QUEUE_SCALE_UP])
+    cp.add_tenant("batch", "sk-batch")
+    cp.add_model(configs.get(MODEL), instances=1, est_load_time=400.0)
+    # two backlogged tenants (contention): uni's depth 6 / weight 1 > 4
+    for _ in range(6):
+        assert cp.web_gateway.handle("sk-test", MODEL, req()) == QUEUED
+    assert cp.web_gateway.handle("sk-batch", MODEL, req()) == QUEUED
+    cp.run_until(120.0)
+    assert any("tenant_weighted_queue" in rule
+               for _, _, rule in cp.autoscaler.fired)
+    assert cp.db["ai_model_configurations"].get(1)["instances"] > 1
+
+
+def test_tenant_rule_inert_without_contention():
+    # a LONE tenant's backlog is plain demand (GATEWAY_QUEUE_SCALE_UP's
+    # job): the share-weighted metric stays zero so the two default
+    # rules cannot double-fire on a single-tenant queue
+    svc = ServiceConfig(queue_capacity=32, queue_ttl=600.0)
+    cp = mk_plane(services=svc, alert_rules=[TENANT_QUEUE_SCALE_UP])
+    cp.add_model(configs.get(MODEL), instances=1, est_load_time=400.0)
+    for _ in range(6):
+        assert cp.web_gateway.handle("sk-test", MODEL, req()) == QUEUED
+    cp.run_until(120.0)
+    assert not cp.autoscaler.fired
+
+
+def test_heavy_weight_tenant_backlog_stays_under_threshold():
+    # same contention, deep tenant at weight 4.0: 6 / 4 = 1.5 < 4 and
+    # the light tenant's 1 / 1.0 = 1 < 4 -> the rule must NOT fire
+    svc = ServiceConfig(queue_capacity=32, queue_ttl=600.0)
+    cp = mk_plane(services=svc, alert_rules=[TENANT_QUEUE_SCALE_UP])
+    cp.add_tenant("batch", "sk-batch")
+    cp.tenancy.apply(TenantSpec(name="uni", weight=4.0))
+    cp.add_model(configs.get(MODEL), instances=1, est_load_time=400.0)
+    for _ in range(6):
+        assert cp.web_gateway.handle("sk-test", MODEL, req()) == QUEUED
+    assert cp.web_gateway.handle("sk-batch", MODEL, req()) == QUEUED
+    cp.run_until(120.0)
+    assert not cp.autoscaler.fired
+
+
+# ---------------------------------------------------------------------------
+# AdminClient tenant verbs
+# ---------------------------------------------------------------------------
+
+def test_admin_client_tenant_verbs_end_to_end():
+    cp = ready_plane()
+    admin = AdminClient(cp)
+    spec = admin.apply_tenant(name="uni", weight=2.0, requests_per_sec=50.0)
+    assert isinstance(spec, TenantSpec) and spec.weight == 2.0
+    assert admin.get_tenant("uni").requests_per_sec == 50.0
+    assert [s.name for s in admin.list_tenants()] == ["uni"]
+    client = ServingClient(cp, api_key="sk-test")
+    client.completions(model=MODEL, prompt=[1] * 8, max_tokens=2,
+                       target_output_len=2).result()
+    assert admin.tenant_usage("uni").requests == 1
+    assert admin.delete_tenant("uni")
+    assert admin.get_tenant("uni") is None
+
+
+def test_admin_client_tenant_verbs_validate():
+    cp = mk_plane()
+    admin = AdminClient(cp)
+    with pytest.raises(APIStatusError) as ei:
+        admin.apply_tenant(name="uni", weight=0.0)
+    assert ei.value.status == 422 and ei.value.error.param == "weight"
+    with pytest.raises(TypeError):
+        admin.apply_tenant(TenantSpec(name="uni"), weight=1.0)
+    # a plane without a tenancy manager refuses the verbs loudly
+    bare = AdminClient(cp.reconciler)
+    with pytest.raises(TypeError):
+        bare.list_tenants()
+
+
+# ---------------------------------------------------------------------------
+# auth cache hardening (satellite)
+# ---------------------------------------------------------------------------
+
+def test_auth_cache_negative_lookups_are_cached_briefly():
+    cp = mk_plane()
+    gw = cp.web_gateway
+    trips0 = gw.stats.db_trips
+    for _ in range(5):
+        status, _, err = gw.api_handle("sk-wrong", MODEL, req())
+        assert status == 401 and err.code == "invalid_api_key"
+    # one DB trip for the burst; the other four hit the negative cache
+    assert gw.stats.db_trips == trips0 + 1
+    assert gw.stats.rejected_auth == 5
+    # negative entries expire on the short TTL, not the positive one
+    cp.loop.run_until(cp.loop.now + cp.spec.services.auth_neg_ttl + 1.0)
+    gw.api_handle("sk-wrong", MODEL, req())
+    assert gw.stats.db_trips == trips0 + 2
+
+
+def test_auth_cache_positive_entries_survive_bad_key_flood():
+    """Eviction prefers expired/negative entries: a flood of unique bad
+    keys must not flush legitimate tenants' cached keys (cache-thrash
+    would recreate exactly the per-request DB load being prevented)."""
+    import dataclasses
+    svc = dataclasses.replace(ServiceConfig(), auth_cache_max=8)
+    cp = ready_plane(services=svc)
+    gw = cp.web_gateway
+    assert gw.handle("sk-test", MODEL, req(out=1)) == OK    # cached +ve
+    for i in range(50):
+        gw.handle(f"sk-flood-{i}", MODEL, req())
+    assert len(gw._auth_cache) <= 8
+    assert "sk-test" in gw._auth_cache          # positive entry survived
+    hits = gw.stats.cache_hits
+    assert gw.handle("sk-test", MODEL, req(out=1)) == OK
+    assert gw.stats.cache_hits == hits + 1      # still an auth cache hit
+
+
+def test_auth_cache_negative_entry_survives_full_positive_cache():
+    """With the cache full of fresh positive entries, a retry-looping bad
+    key must keep its own negative entry (an LRU positive goes instead) —
+    otherwise every retry is a DB trip again."""
+    import dataclasses
+    svc = dataclasses.replace(ServiceConfig(), auth_cache_max=3)
+    cp = mk_plane(services=svc)
+    for i in range(3):
+        cp.db.create_tenant(f"t{i}", f"sk-t{i}")
+    gw = cp.web_gateway
+    for i in range(3):                          # fill with fresh positives
+        gw.handle(f"sk-t{i}", MODEL, req())
+    trips = gw.stats.db_trips
+    gw.handle("sk-bad", MODEL, req())           # miss + insert negative
+    gw.handle("sk-bad", MODEL, req())           # must hit the negative
+    assert gw.stats.db_trips == trips + 1
+
+
+def test_auth_cache_is_bounded_lru():
+    svc = ServiceConfig()
+    svc = type(svc)(**{**svc.__dict__, "auth_cache_max": 4})
+    cp = mk_plane(services=svc)
+    gw = cp.web_gateway
+    for i in range(20):                   # unique garbage keys
+        gw.handle(f"sk-garbage-{i}", MODEL, req())
+    assert len(gw._auth_cache) <= 4
+    # the real key still authenticates (and re-enters the cache)
+    cp.add_model(configs.get(MODEL), instances=1, est_load_time=10.0)
+    cp.run_until(60.0)
+    assert gw.handle("sk-test", MODEL, req(out=1)) == OK
+    assert "sk-test" in gw._auth_cache

@@ -1,11 +1,15 @@
 """Shared benchmark plumbing: client-side metric recording + percentile
-summaries in the paper's Table-1 format."""
+summaries in the paper's Table-1 format, plus per-class SLO attainment
+(fraction of completed requests whose measured TTFT and E2EL both meet
+their class targets) — the first-class serving objective next to p99."""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from typing import Optional
 
 import numpy as np
+
+from repro.config import DEFAULT_SLO_TARGETS
 
 
 @dataclass
@@ -14,6 +18,16 @@ class ClientRecord:
     t_first: Optional[float] = None
     t_last: Optional[float] = None
     n_tokens: int = 0
+    slo_class: Optional[str] = None
+
+    def meets_slo(self, targets=None) -> Optional[bool]:
+        """Did this request meet BOTH its class TTFT and E2EL targets?
+        None when the request has no class or never finished."""
+        targets = targets or DEFAULT_SLO_TARGETS
+        tgt = targets.get(self.slo_class)
+        if tgt is None or self.t_last is None:
+            return None
+        return self.ttft <= tgt.ttft and self.e2el <= tgt.e2el
 
     @property
     def ttft(self):
@@ -36,16 +50,20 @@ class ClientRecorder:
     (gateway path) or attach to `Request.on_token` directly (direct-to-node
     path)."""
 
-    def __init__(self):
+    def __init__(self, slo_targets: Optional[dict] = None):
         self.records: dict[int, ClientRecord] = {}
+        self.slo_targets = slo_targets or DEFAULT_SLO_TARGETS
 
-    def _record(self, request_id: int, now: float) -> ClientRecord:
-        rec = self.records[request_id] = ClientRecord(t_submit=now)
+    def _record(self, request_id: int, now: float,
+                slo_class: Optional[str] = None) -> ClientRecord:
+        rec = self.records[request_id] = ClientRecord(t_submit=now,
+                                                     slo_class=slo_class)
         return rec
 
     def track(self, stream, now: float) -> ClientRecord:
         """ServingClient path: subscribe to a TokenStream session."""
-        rec = self._record(stream.req.request_id, now)
+        rec = self._record(stream.req.request_id, now,
+                           getattr(stream.req, "slo_class", None))
 
         def on_token(r, tok, t):
             if rec.t_first is None:
@@ -58,7 +76,8 @@ class ClientRecorder:
 
     def submit(self, req, now: float):
         """Direct-to-node path: install a raw on_token callback."""
-        rec = self._record(req.request_id, now)
+        rec = self._record(req.request_id, now,
+                           getattr(req, "slo_class", None))
 
         def on_token(r, tok, t):
             if rec.t_first is None:
@@ -72,7 +91,7 @@ class ClientRecorder:
     def summary(self) -> dict:
         recs = [r for r in self.records.values() if r.t_last is not None]
         if not recs:
-            return {"completed": 0}
+            return {"completed": 0, **self.slo_attainment()}
         e2el = np.array([r.e2el for r in recs])
         ttft = np.array([r.ttft for r in recs])
         tpot = np.array([r.tpot for r in recs if r.tpot is not None])
@@ -80,7 +99,7 @@ class ClientRecorder:
         t_end = max(r.t_last for r in recs)
         t_start = min(r.t_submit for r in recs)
         dur = t_end - t_start
-        return {
+        out = {
             "completed": len(recs),
             "duration_s": dur,
             "e2el_median_ms": float(np.median(e2el) * 1e3),
@@ -97,6 +116,28 @@ class ClientRecorder:
             "throughput_out_tok_s": out_tokens / dur if dur else 0,
             "total_output_tokens": out_tokens,
         }
+        out.update(self.slo_attainment())
+        return out
+
+    def slo_attainment(self) -> dict:
+        """Per-class SLO attainment over SUBMITTED requests of that class:
+        ``slo_attainment_<class>`` (fraction meeting both TTFT and E2EL
+        targets — unfinished requests count as misses, so a policy cannot
+        game the metric by starving work) plus per-class p99 TTFT of the
+        finishers.  Empty when no record carries a class."""
+        by_class: dict = {}
+        for r in self.records.values():
+            if r.slo_class is not None:
+                by_class.setdefault(r.slo_class, []).append(r)
+        out = {}
+        for cls, recs in sorted(by_class.items()):
+            met = sum(1 for r in recs if r.meets_slo(self.slo_targets))
+            out[f"slo_attainment_{cls}"] = met / len(recs)
+            ttfts = [r.ttft for r in recs if r.t_first is not None]
+            if ttfts:
+                out[f"ttft_p99_{cls}_ms"] = float(
+                    np.percentile(np.array(ttfts), 99) * 1e3)
+        return out
 
 
 def merge_runs(summaries: list[dict]) -> dict:

@@ -19,6 +19,7 @@ from dataclasses import dataclass, field
 from typing import Optional, Union
 
 from repro.api.errors import APIStatusError, validation_error
+from repro.config import SLO_CLASSES
 from repro.engine.request import Request, SamplingParams
 
 ROLES = ("system", "user", "assistant", "tool")
@@ -86,6 +87,10 @@ class _RequestBase:
     n: int = 1                  # choices per request (fan-out, OpenAI `n`)
     stream: bool = False
     priority: int = 0
+    # latency-target tier (config.SLO_CLASSES): weights the slo_cost
+    # router's endpoint scoring and the gateway queue's ordering; the
+    # benchmark harness reports SLO attainment against the class targets
+    slo_class: str = "standard"
     session_id: Optional[str] = None
     seed: int = 0
     stop_token: Optional[int] = None
@@ -108,6 +113,9 @@ class _RequestBase:
             _fail("stream", f"stream {self.stream!r} must be a bool")
         if type(self.priority) is not int:
             _fail("priority", f"priority {self.priority!r} must be an int")
+        if self.slo_class not in SLO_CLASSES:
+            _fail("slo_class", f"slo_class {self.slo_class!r} must be one "
+                               f"of {SLO_CLASSES}")
         if self.session_id is not None \
                 and not isinstance(self.session_id, str):
             _fail("session_id", "session_id must be a string or null")
@@ -130,6 +138,7 @@ class _RequestBase:
                 "top_p": self.top_p, "max_tokens": self.max_tokens,
                 "n": self.n,
                 "stream": self.stream, "priority": self.priority,
+                "slo_class": self.slo_class,
                 "session_id": self.session_id, "seed": self.seed,
                 "stop_token": self.stop_token,
                 "target_output_len": self.target_output_len}
@@ -137,6 +146,7 @@ class _RequestBase:
     def _engine_request(self, prompt_tokens: list) -> Request:
         return Request(prompt_tokens=prompt_tokens, model=self.model,
                        session_id=self.session_id, priority=self.priority,
+                       slo_class=self.slo_class,
                        sampling=self._sampling())
 
 
@@ -204,7 +214,8 @@ class CompletionRequest(_RequestBase):
         return cls(model=model, prompt=list(req.prompt_tokens),
                    temperature=sp.temperature, top_k=sp.top_k, top_p=sp.top_p,
                    max_tokens=sp.max_new_tokens, stream=stream,
-                   priority=req.priority, session_id=req.session_id,
+                   priority=req.priority, slo_class=req.slo_class,
+                   session_id=req.session_id,
                    seed=sp.seed, stop_token=sp.stop_token,
                    target_output_len=sp.target_output_len)
 

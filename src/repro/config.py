@@ -172,6 +172,28 @@ class ModelConfig:
 
 
 @dataclass(frozen=True)
+class SLOTarget:
+    """Latency targets for one request SLO class: a request *attains* its
+    SLO when both its TTFT and its end-to-end latency land under target.
+    These are the denominators of the benchmark harness's SLO-attainment
+    metric and the per-class weights of the `slo_cost` routing policy."""
+    ttft: float          # seconds to first token
+    e2el: float          # seconds to last token
+
+
+#: request-level SLO classes (latency-target tiers, not priority ints):
+#: `interactive` is a human waiting at a chat box, `standard` the default
+#: API call, `batch` offline bulk work that only cares about completion.
+SLO_CLASSES = ("interactive", "standard", "batch")
+
+DEFAULT_SLO_TARGETS = {
+    "interactive": SLOTarget(ttft=2.0, e2el=60.0),
+    "standard": SLOTarget(ttft=10.0, e2el=300.0),
+    "batch": SLOTarget(ttft=60.0, e2el=1800.0),
+}
+
+
+@dataclass(frozen=True)
 class ServiceConfig:
     """Control-plane service knobs (paper §3.1–3.3 plus the routing and
     queuing extensions from the production-stack proposals).
@@ -213,6 +235,10 @@ class ServiceConfig:
     # default prefill->decode KV handoff link (bytes/s) for disaggregated
     # models configured outside the declarative spec path
     kv_transfer_bandwidth: float = 40e9
+    # per-class latency targets: the SLO-attainment denominators and the
+    # slo_cost router's per-request weighting (keys must be SLO_CLASSES)
+    slo_targets: dict = field(
+        default_factory=lambda: dict(DEFAULT_SLO_TARGETS))
 
 
 @dataclass(frozen=True)

@@ -95,6 +95,7 @@ class ControlPlane:
             self.db, self.loop, self.registry,
             services=self.spec.services,
             load_fn=self.metrics_gateway.endpoint_load,
+            prior_fn=self.roofline_prior,
             service_estimator=self.estimate_service_time,
             tenancy=self.tenancy)
         self._cost_cache: dict[str, object] = {}
@@ -145,11 +146,10 @@ class ControlPlane:
             slurm_partition=self.spec.partition)
 
     # ------------------------------------------------------------------
-    def estimate_service_time(self, model_name: str, req) -> Optional[float]:
-        """Roofline service-time estimate (prefill + full decode) for one
-        request — the gateway's queue-admission signal.  Uses the model's
-        configured tensor-parallel degree (gpus_per_node), matching the
-        engines the request would actually run on."""
+    def _roofline(self, model_name: str):
+        """Cached RooflineCost for one model at its configured
+        tensor-parallel degree (gpus_per_node), matching the engines the
+        request would actually run on; None for unknown models."""
         cfg = self.model_cfgs.get(model_name)
         if cfg is None:
             return None
@@ -161,8 +161,27 @@ class ControlPlane:
             from repro.engine.costmodel import RooflineCost
             cost = self._cost_cache[(model_name, tp)] = RooflineCost(
                 cfg, self.spec.hardware, tp=tp)
+        return cost
+
+    def estimate_service_time(self, model_name: str, req) -> Optional[float]:
+        """Roofline service-time estimate (prefill + full decode) for one
+        request — the gateway's queue-admission signal."""
+        cost = self._roofline(model_name)
+        if cost is None:
+            return None
         n, out = req.prompt_len, req.target_len()
         return cost.prefill_time(n, n) + out * cost.decode_time(1, n + out)
+
+    def roofline_prior(self, model_name: str, req) -> Optional[tuple]:
+        """(ttft_s, tbt_s) roofline prior for one request on an IDLE
+        reference instance — the SLO-cost router's cold-start estimate
+        before an endpoint has observed finishes."""
+        cost = self._roofline(model_name)
+        if cost is None:
+            return None
+        n = req.prompt_len
+        return (cost.prefill_time(n, n),
+                cost.decode_time(1, n + req.target_len()))
 
     # ------------------------------------------------------------------
     def _default_engine(self, cfg: ModelConfig, tp: int) -> LLMEngine:

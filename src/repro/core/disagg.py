@@ -163,13 +163,16 @@ class DisaggregatedRouter(RoutingPolicy):
 
     name = "disaggregated"
     wants_load_fn = True
+    wants_prior_fn = True
 
-    def __init__(self, load_fn=None, inner: str = "least_loaded"):
+    def __init__(self, load_fn=None, prior_fn=None,
+                 inner: str = "least_loaded"):
         super().__init__()
         if inner == self.name:       # no self-nesting
             inner = "least_loaded"
         self.inner_name = inner
-        self._inner = make_policy(inner, load_fn=load_fn)
+        self._inner = make_policy(inner, load_fn=load_fn,
+                                  prior_fn=prior_fn)
         self.hops = {"prefill": 0, "decode": 0}
         self.pool_fallbacks = 0
 

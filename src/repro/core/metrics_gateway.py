@@ -134,6 +134,14 @@ class MetricsGateway:
                     "running_total": sum(s["num_running"] for s in snaps),
                     "gateway_queued": queued,
                     "tenant_queue_weighted": tenant_q,
+                    # fleet-level prefix-cache effectiveness (cumulative
+                    # block-level hit ratio across the config's engines);
+                    # per-endpoint rates live in endpoint_metrics for the
+                    # KV-aware router
+                    "prefix_hit_rate": (
+                        sum(s.get("prefix_hits_total", 0) for s in snaps)
+                        / max(sum(s.get("prefix_queries_total", 0)
+                                  for s in snaps), 1)),
                 }
                 # disaggregated pools: per-phase depths so the autoscaler's
                 # pool-addressed rules can grow prefill and decode capacity

@@ -41,11 +41,18 @@ from __future__ import annotations
 import bisect
 import hashlib
 import itertools
+import math
 from collections import OrderedDict, deque
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
+from repro.config import SLO_CLASSES
 from repro.engine.request import Request
+
+#: dequeue urgency of each SLO class (higher first): interactive > standard
+#: > batch — a latency-target tier outranks per-request priority ints,
+#: which order within a class
+_SLO_RANK = {c: i for i, c in enumerate(reversed(SLO_CLASSES))}
 
 
 def _stable_hash(key: str) -> int:
@@ -75,6 +82,9 @@ class RoutingPolicy:
     # policies that consume Metrics-Gateway scrape snapshots get the
     # gateway's `load_fn` injected by `make_policy`
     wants_load_fn = False
+    # policies that seed service-time estimates from the control plane's
+    # roofline cost model get `prior_fn(model, req) -> (ttft_s, tbt_s)`
+    wants_prior_fn = False
 
     def __init__(self):
         self.picks: dict[tuple, int] = {}
@@ -127,9 +137,20 @@ class LeastLoaded(RoutingPolicy):
         self.load_fn = load_fn or (lambda key: {})
         self._inflight: dict[tuple, int] = {}
         self._since_scrape: dict[tuple, int] = {}
+        self._fin_since_scrape: dict[tuple, int] = {}
         self._scrape_time: dict[tuple, float] = {}
 
     def _depth(self, ep: dict) -> tuple:
+        return (self.effective_depth(ep),
+                (self.load_fn(endpoint_key(ep)) or {})
+                .get("kv_utilization", 0.0), ep["id"])
+
+    def effective_depth(self, ep: dict) -> int:
+        """Scraped depth corrected by this gateway's own traffic since the
+        scrape: dispatches add, finishes subtract — both directions, or a
+        fast endpoint whose requests complete between ~5 s scrapes would
+        look permanently loaded and the policy would herd onto slower ones
+        (the exact effect the correction term exists to prevent)."""
         key = endpoint_key(ep)
         snap = self.load_fn(key) or {}
         scraped = snap.get("num_waiting", 0) + snap.get("num_running", 0)
@@ -139,11 +160,14 @@ class LeastLoaded(RoutingPolicy):
             pending = self._inflight.get(key, 0)
         else:
             if t != self._scrape_time.get(key):
-                # new scrape observed: it already reflects earlier dispatches
+                # new scrape observed: it already reflects earlier
+                # dispatches AND earlier finishes
                 self._scrape_time[key] = t
                 self._since_scrape[key] = 0
-            pending = self._since_scrape.get(key, 0)
-        return (scraped + pending, snap.get("kv_utilization", 0.0), ep["id"])
+                self._fin_since_scrape[key] = 0
+            pending = self._since_scrape.get(key, 0) \
+                - self._fin_since_scrape.get(key, 0)
+        return max(0, scraped + pending)
 
     def select(self, eps: list[dict], req: Request) -> dict:
         return min(eps, key=self._depth)
@@ -157,6 +181,8 @@ class LeastLoaded(RoutingPolicy):
     def note_finish(self, ep_key: tuple, req: Request):
         if self._inflight.get(ep_key, 0) > 0:
             self._inflight[ep_key] -= 1
+        self._fin_since_scrape[ep_key] = \
+            self._fin_since_scrape.get(ep_key, 0) + 1
 
     def stats(self) -> dict:
         out = super().stats()
@@ -282,19 +308,213 @@ class PrefixAware(RoutingPolicy):
         return out
 
 
+class _EWStat:
+    """Exponentially-weighted online mean AND variance of one scalar
+    series (West 1979's incremental form with a fixed decay): the
+    TimeTrackingRouter statistic — the mean ranks endpoints, the variance
+    prices their unpredictability into the tail-sensitive classes."""
+
+    __slots__ = ("mean", "var", "n")
+
+    def __init__(self):
+        self.mean = 0.0
+        self.var = 0.0
+        self.n = 0
+
+    def update(self, x: float, alpha: float):
+        if self.n == 0:
+            self.mean = x
+            self.var = 0.0
+        else:
+            diff = x - self.mean
+            incr = alpha * diff
+            self.mean += incr
+            self.var = (1.0 - alpha) * (self.var + diff * incr)
+        self.n += 1
+
+
+class SLOCostRouter(RoutingPolicy):
+    """Predictive SLO-aware cost routing: every signal the other policies
+    consume alone, unified into one per-request score (ROADMAP item 1; the
+    production-stack TimeTrackingRouter/QoE proposals).
+
+    Per endpoint it tracks online TTFT and TBT estimators (exponentially
+    weighted mean AND variance, updated from `note_finish` via the
+    request's `RequestMetrics`), seeded from the control plane's roofline
+    prior (`prior_fn`) while an endpoint has no observations — per-model
+    performance varies enough across heterogeneous HPC nodes (arXiv
+    2508.17814) that a static policy cannot pick well.  The score for a
+    request of SLO class c and target output length L:
+
+        cost(ep) = w_ttft(c) * [ ttft_hat + depth * tbt_ref        (wait)
+                                 - kv_weight * hit_rate * p_ttft ] (KV)
+                 + w_e2e(c)  * L * tbt_hat                         (decode)
+                 + z(c) * sqrt(var_ttft + L^2 * var_tbt)           (risk)
+
+    * `depth` is LeastLoaded's effective queue depth (scrape + own traffic
+      since the scrape), scaled by the endpoint's observed per-token speed
+      so a straggler's backlog costs more than the same depth on a fast
+      chip;
+    * `hit_rate` is the REAL per-endpoint prefix-cache hit rate, computed
+      windowed between consecutive Metrics-Gateway scrapes of the engine
+      `BlockAllocator`'s counters (prefix_aware pins by hash blindly; this
+      term rewards the endpoint whose cache is actually hitting) and
+      discounts the prefill share of the prior;
+    * the variance term is the QoE knob: interactive traffic pays a high
+      z, so a jittery endpoint loses interactive requests to a steadier
+      one even at equal means, while batch ignores variance entirely.
+    """
+
+    name = "slo_cost"
+    wants_load_fn = True
+    wants_prior_fn = True
+
+    #: slo_class -> (w_ttft, w_e2e, z): interactive is TTFT- and
+    #: tail-dominated, batch cares only about completion time, standard
+    #: balances both with a mild risk premium
+    CLASS_WEIGHTS = {
+        "interactive": (1.0, 0.15, 2.0),
+        "standard": (1.0, 1.0, 0.5),
+        "batch": (0.25, 1.0, 0.0),
+    }
+
+    def __init__(self, load_fn: Optional[Callable[[tuple], dict]] = None,
+                 prior_fn: Optional[Callable] = None, alpha: float = 0.25,
+                 depth_weight: float = 1.0, kv_weight: float = 1.0):
+        super().__init__()
+        self.load_fn = load_fn or (lambda key: {})
+        # fn(model_name, req) -> (prior ttft s, prior tbt s) | None —
+        # the ControlPlane roofline estimator
+        self.prior_fn = prior_fn
+        self.alpha = alpha
+        self.depth_weight = depth_weight
+        self.kv_weight = kv_weight
+        # effective-depth term (scrape + dispatches - finishes since)
+        self._lease = LeastLoaded(load_fn)
+        self._ttft: dict[tuple, _EWStat] = {}
+        self._tbt: dict[tuple, _EWStat] = {}
+        # (node, port) -> (queries_total, hits_total, scrape_time, rate):
+        # windowed prefix-hit rate between consecutive scrapes
+        self._kv_last: dict[tuple, tuple] = {}
+        self.selections = {c: 0 for c in SLO_CLASSES}
+        self.observations = 0
+
+    # -- signals -----------------------------------------------------------
+    def _hit_rate(self, key: tuple) -> float:
+        snap = self.load_fn(key) or {}
+        q = snap.get("prefix_queries_total")
+        t = snap.get("time")
+        if q is None or t is None:
+            return 0.0
+        h = snap.get("prefix_hits_total", 0)
+        last = self._kv_last.get(key)
+        if last is None or q < last[0]:
+            # first sight (or engine restarted and counters reset):
+            # the cumulative ratio is the best window available
+            rate = h / max(q, 1)
+        elif t != last[2]:
+            dq, dh = q - last[0], h - last[1]
+            rate = (dh / dq) if dq > 0 else last[3]
+        else:
+            return last[3]
+        self._kv_last[key] = (q, h, t, rate)
+        return rate
+
+    def _estimates(self, key: tuple, prior) -> tuple:
+        """(ttft_hat, var_ttft, tbt_hat, var_tbt) — observed EW stats,
+        falling back to the roofline prior (variance 0) with no obs."""
+        p_ttft, p_tbt = prior if prior is not None else (0.0, 0.0)
+        ts, bs = self._ttft.get(key), self._tbt.get(key)
+        ttft_hat = ts.mean if ts is not None and ts.n else p_ttft
+        var_ttft = ts.var if ts is not None and ts.n else 0.0
+        tbt_hat = bs.mean if bs is not None and bs.n else p_tbt
+        var_tbt = bs.var if bs is not None and bs.n else 0.0
+        return ttft_hat, var_ttft, tbt_hat, var_tbt
+
+    def score(self, ep: dict, req: Request) -> float:
+        key = endpoint_key(ep)
+        prior = self.prior_fn(req.model, req) if self.prior_fn else None
+        ttft_hat, var_ttft, tbt_hat, var_tbt = self._estimates(key, prior)
+        p_ttft = prior[0] if prior is not None else ttft_hat
+        target = req.target_len()
+        depth = self._lease.effective_depth(ep)
+        # per-unit cost of queued work: the endpoint's own pace when
+        # known, the prior otherwise — never zero on a loaded endpoint
+        tbt_ref = tbt_hat if tbt_hat > 0 else \
+            (prior[1] if prior is not None else 0.0)
+        w_ttft, w_e2e, z = self.CLASS_WEIGHTS.get(
+            getattr(req, "slo_class", "standard"),
+            self.CLASS_WEIGHTS["standard"])
+        wait = ttft_hat + self.depth_weight * depth * tbt_ref \
+            - self.kv_weight * self._hit_rate(key) * p_ttft
+        risk = z * math.sqrt(max(var_ttft, 0.0)
+                             + target * target * max(var_tbt, 0.0))
+        return w_ttft * max(wait, 0.0) + w_e2e * target * tbt_hat + risk
+
+    # -- policy interface --------------------------------------------------
+    def select(self, eps: list[dict], req: Request) -> dict:
+        cls = getattr(req, "slo_class", "standard")
+        if cls in self.selections:
+            self.selections[cls] += 1
+        # depth then row id break score ties (cold start with no prior:
+        # all scores 0.0 -> behaves exactly like LeastLoaded)
+        return min(eps, key=lambda e: (self.score(e, req),
+                                       self._lease.effective_depth(e),
+                                       e["id"]))
+
+    def note_dispatch(self, ep: dict, req: Request):
+        super().note_dispatch(ep, req)
+        self._lease.note_dispatch(ep, req)
+
+    def note_finish(self, ep_key: tuple, req: Request):
+        self._lease.note_finish(ep_key, req)
+        m = req.metrics
+        if m.first_token_time is None:
+            return                      # failed before a token: no signal
+        ttft = m.ttft
+        if ttft is not None and ttft >= 0.0:
+            self._ttft.setdefault(ep_key, _EWStat()).update(ttft, self.alpha)
+            self.observations += 1
+        tpot = m.tpot(req.output_len)
+        if tpot is not None and req.output_len > 1 and tpot >= 0.0:
+            self._tbt.setdefault(ep_key, _EWStat()).update(tpot, self.alpha)
+
+    def stats(self) -> dict:
+        out = super().stats()
+        out.update(
+            selections_by_class=dict(self.selections),
+            observations=self.observations,
+            inflight=self._lease.stats().get("inflight", {}),
+            endpoint_estimates={
+                f"{n}:{p}": {
+                    "ttft_mean": round(s.mean, 4),
+                    "ttft_std": round(math.sqrt(max(s.var, 0.0)), 4),
+                    "n": s.n,
+                    "tbt_mean": round(self._tbt[(n, p)].mean, 5)
+                    if (n, p) in self._tbt else None,
+                    "kv_hit_rate": round(self._kv_last[(n, p)][3], 3)
+                    if (n, p) in self._kv_last else None,
+                } for (n, p), s in self._ttft.items()})
+        return out
+
+
 POLICIES = {
     "round_robin": RoundRobin,
     "least_loaded": LeastLoaded,
     "session_affinity": SessionAffinity,
     "prefix_aware": PrefixAware,
+    "slo_cost": SLOCostRouter,
 }
 
 
 def make_policy(name: str,
                 load_fn: Optional[Callable[[tuple], dict]] = None,
+                prior_fn: Optional[Callable] = None,
                 **kw) -> RoutingPolicy:
     """Policy factory used by the Web Gateway; `load_fn` maps an endpoint
-    (node, port) key to its latest Metrics-Gateway scrape snapshot."""
+    (node, port) key to its latest Metrics-Gateway scrape snapshot and
+    `prior_fn(model, req)` returns the control plane's roofline
+    (ttft, tbt) prior for cost-scoring policies."""
     try:
         cls = POLICIES[name]
     except KeyError:
@@ -302,6 +522,8 @@ def make_policy(name: str,
                          f"choose from {sorted(POLICIES)}") from None
     if cls.wants_load_fn:
         kw.setdefault("load_fn", load_fn)
+    if cls.wants_prior_fn:
+        kw.setdefault("prior_fn", prior_fn)
     return cls(**kw)
 
 
@@ -522,13 +744,17 @@ class GatewayQueue:
         if ratio(victim_t) <= ratio(tenant, extra_cost=self.cost_fn(req)):
             return False          # admitting would not improve fairness
         # least-urgent entry across the victim's in-scope buckets:
-        # lowest effective priority, newest (enqueue time) among equals
+        # lowest SLO class (batch evicts before interactive), lowest
+        # effective priority, newest (enqueue time) among equals
         worst = None
         for m in models:
             for i, e in enumerate(self._q[m].get(victim_t, ())):
                 # arrival index breaks enqueue-time ties (same-tick
                 # offers): the later arrival is the newer entry
-                key = (-(e.req.priority
+                key = (-_SLO_RANK.get(getattr(e.req, "slo_class",
+                                              "standard"),
+                                      _SLO_RANK["standard"]),
+                       -(e.req.priority
                          + self.aging * (now - e.enqueued_at)),
                        e.enqueued_at, i)
                 if worst is None or key > worst[0]:
@@ -583,12 +809,16 @@ class GatewayQueue:
 
     def _select(self, q: deque, now: float) -> int:
         """Index of the next entry to dispatch within one tenant bucket:
-        highest effective priority (priority + aging * wait), FIFO
+        SLO class first (interactive > standard > batch — a drained slot
+        should clear the latency-sensitive backlog before bulk work),
+        then highest effective priority (priority + aging * wait), FIFO
         tie-break — entries sit in arrival order and the strict `>` keeps
         the earliest among equals."""
         best_i, best_key = 0, None
         for i, item in enumerate(q):
-            key = item.req.priority + self.aging * (now - item.enqueued_at)
+            key = (_SLO_RANK.get(getattr(item.req, "slo_class", "standard"),
+                                 _SLO_RANK["standard"]),
+                   item.req.priority + self.aging * (now - item.enqueued_at))
             if best_key is None or key > best_key:
                 best_i, best_key = i, key
         return best_i

@@ -86,6 +86,7 @@ class WebGateway:
                  latency: GatewayLatency = None, auth_cache_ttl: float = 60.0,
                  services: Optional[ServiceConfig] = None,
                  load_fn: Optional[Callable[[tuple], dict]] = None,
+                 prior_fn: Optional[Callable] = None,
                  service_estimator: Optional[Callable] = None,
                  tenancy=None):
         self.db = db
@@ -113,8 +114,11 @@ class WebGateway:
         self._disagg: dict[str, DisaggProfile] = {}
         svc = self.services
         self._load_fn = load_fn
+        # fn(model, req) -> roofline (ttft, tbt) prior, from the control
+        # plane; seeds cost-scoring policies before any observations
+        self._prior_fn = prior_fn
         self.router = make_policy(
-            svc.routing_policy, load_fn=load_fn,
+            svc.routing_policy, load_fn=load_fn, prior_fn=prior_fn,
             **({"replicas": svc.affinity_replicas}
                if svc.routing_policy == "session_affinity" else {}),
             **({"prefix_tokens": svc.prefix_tokens}
@@ -156,7 +160,8 @@ class WebGateway:
         if installed is not None and installed.name == policy_name:
             return
         self._model_routers[model_name] = make_policy(
-            policy_name, load_fn=self._load_fn, **kw)
+            policy_name, load_fn=self._load_fn, prior_fn=self._prior_fn,
+            **kw)
 
     def set_model_queue(self, model_name: str, capacity=None, ttl=None):
         """Per-deployment gateway-queue knobs (None, None clears)."""
@@ -310,7 +315,11 @@ class WebGateway:
                 return self._reject(MODEL_NOT_READY, stream, admission_err)
             if self.queue.offer(
                     req, model_name, now,
-                    dispatch=lambda r: self._route_and_forward(model_name, r)):
+                    # drained re-dispatches already authenticated at
+                    # admission: t_auth=0.0, or every drain pass would
+                    # charge auth_cache_hit a second time
+                    dispatch=lambda r: self._route_and_forward(
+                        model_name, r, t_auth=0.0)):
                 return self._status(QUEUED), stream, None
             self.stats.rejected_no_endpoint += 1
         if status != OK:
@@ -357,18 +366,19 @@ class WebGateway:
         eps = [e for e in eps if not self._is_draining(e)]
         if not eps:
             return MODEL_NOT_READY
+        # drop zombie rows (endpoint row exists, instance dead/unregistered)
+        # BEFORE the policy sees the list: a second select() on a filtered
+        # list would advance RoundRobin's cursor twice (silently skipping an
+        # endpoint per zombie hit) and make PrefixAware pin the prefix to
+        # the dead endpoint's key before re-pinning
+        live = [e for e in eps
+                if (i := self.registry.get(endpoint_key(e))) is not None
+                and i.alive]
+        if not live:
+            return INSTANCE_UNREACHABLE
         router = self.router_for(model_name)
-        ep = router.select(eps, req)
-        inst = self.registry.get(endpoint_key(ep))
-        if inst is None or not inst.alive:
-            # the picked endpoint is a zombie row: any live alternative?
-            live = [e for e in eps
-                    if (i := self.registry.get(endpoint_key(e))) is not None
-                    and i.alive]
-            if not live:
-                return INSTANCE_UNREACHABLE
-            ep = router.select(live, req)
-            inst = self.registry[endpoint_key(ep)]
+        ep = router.select(live, req)
+        inst = self.registry[endpoint_key(ep)]
         self._forward(ep, inst, req,
                       t_auth if t_auth is not None else self.lat.auth_cache_hit,
                       router=router)
@@ -452,13 +462,15 @@ class WebGateway:
         """Dispatch a follow-up hop (decode hop / transparent retry).  No
         HTTP response is held open for these, so a terminal failure must be
         delivered as an error event on the stream; MODEL_NOT_READY /
-        INSTANCE_UNREACHABLE re-enqueue into the gateway queue first."""
-        status = self._route_and_forward(model_name, req)
+        INSTANCE_UNREACHABLE re-enqueue into the gateway queue first.
+        Follow-up hops authenticated at original admission: t_auth=0.0."""
+        status = self._route_and_forward(model_name, req, t_auth=0.0)
         if status == OK:
             return
         if self.queue.offer(
                 req, model_name, self.loop.now,
-                dispatch=lambda r: self._route_and_forward(model_name, r)):
+                dispatch=lambda r: self._route_and_forward(
+                    model_name, r, t_auth=0.0)):
             return
         req.status = RequestStatus.FAILED
         self.stats.rejected_no_endpoint += 1

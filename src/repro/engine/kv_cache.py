@@ -42,6 +42,13 @@ class BlockAllocator:
         self.prefix_index: dict[int, int] = {}
         # blocks with ref_count 0 kept around for reuse (LRU-ish by order)
         self._evictable: dict[int, None] = {}
+        # prefix-cache effectiveness counters (block-granular): every
+        # `lookup` is one query, every non-None return one hit.  Scraped
+        # through the engine snapshot so KV-aware routing (slo_cost) can
+        # score endpoints by REAL per-endpoint hit rates instead of
+        # pinning by hash blindly.
+        self.prefix_queries = 0
+        self.prefix_hits = 0
 
     # -- invariant helpers (exercised by hypothesis tests) ---------------
     def num_free(self) -> int:
@@ -99,13 +106,21 @@ class BlockAllocator:
     def lookup(self, token_hash: int) -> Optional[int]:
         if not self.enable_prefix_caching:
             return None
+        self.prefix_queries += 1
         idx = self.prefix_index.get(token_hash)
         if idx is None:
             return None
         b = self.blocks[idx]
         if b.token_hash != token_hash:
             return None
+        self.prefix_hits += 1
         return idx
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Cumulative block-level hit rate; routing computes windowed
+        rates from the scraped totals instead of this lifetime ratio."""
+        return self.prefix_hits / max(self.prefix_queries, 1)
 
     @property
     def utilization(self) -> float:

@@ -46,4 +46,8 @@ def snapshot(engine, now: float) -> dict:
         "busy_time_total": m.busy_time,
         "handoffs_exported_total": m.handoffs_exported,
         "handoffs_imported_total": m.handoffs_imported,
+        # BlockAllocator prefix-cache counters: KV-aware routing derives
+        # per-endpoint windowed hit rates from consecutive scrapes of these
+        "prefix_queries_total": engine.allocator.prefix_queries,
+        "prefix_hits_total": engine.allocator.prefix_hits,
     }

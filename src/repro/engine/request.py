@@ -141,6 +141,10 @@ class Request:
     # gateway queue (across tenants, weighted fair queuing rules — see
     # repro.core.tenancy)
     priority: int = 0
+    # request SLO class (config.SLO_CLASSES): the latency-target tier the
+    # slo_cost router scores against and the gateway queue orders by;
+    # validated at the wire layer (422 on unknown classes)
+    slo_class: str = "standard"
     # authenticated tenant, stamped by the Web Gateway after the bearer-
     # token lookup: the WFQ bucket key, the usage-metering account and the
     # session-affinity namespace (never client-supplied)

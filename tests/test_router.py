@@ -544,3 +544,151 @@ def test_round_robin_default_unchanged():
     stats = cp.web_gateway.router_stats()
     assert stats["policy"] == "round_robin"
     assert sum(stats["picks"].values()) == 6
+
+
+# ---------------------------------------------------------------------------
+# regressions: load-signal and dispatch bugs in the routing tier
+# ---------------------------------------------------------------------------
+
+def test_least_loaded_finish_between_scrapes_decrements():
+    """Finishes between scrapes must subtract from the correction term:
+    a fast endpoint whose dispatches complete before the next ~5 s scrape
+    would otherwise look permanently loaded and the policy would herd new
+    work onto the slower endpoint."""
+    load = {k: {"time": 5.0, "num_waiting": 0, "num_running": 0,
+                "kv_utilization": 0.0}
+            for k in [("node000", 8000), ("node001", 8000)]}
+    pol = LeastLoaded(load_fn=lambda k: load.get(k, {}))
+    rows = eps(2)
+    # gateway flow: select() observes the scrape before each dispatch
+    pol.note_dispatch(pol.select(rows, req()), req())       # -> ep 1
+    pol.note_dispatch(pol.select(rows, req()), req())       # -> ep 2
+    pol.note_dispatch(rows[0], req())                       # ep 1 again
+    # both of endpoint 1's requests finish before the next scrape
+    pol.note_finish(("node000", 8000), req())
+    pol.note_finish(("node000", 8000), req())
+    assert pol.effective_depth(rows[0]) == 0    # was 2 pre-fix
+    assert pol.effective_depth(rows[1]) == 1
+    assert pol.select(rows, req())["id"] == 1
+    # a new scrape resets BOTH directions of the correction
+    for k in load:
+        load[k] = {"time": 10.0, "num_waiting": 1, "num_running": 0,
+                   "kv_utilization": 0.0}
+    assert pol.effective_depth(rows[0]) == 1
+    assert pol.effective_depth(rows[1]) == 1
+    # more finishes than the scrape reflects never drive depth negative
+    for _ in range(5):
+        pol.note_finish(("node000", 8000), req())
+    assert pol.effective_depth(rows[0]) == 0
+
+
+def test_zombie_endpoint_no_double_select_round_robin():
+    """A zombie endpoint row (instance died, row still READY) must be
+    filtered BEFORE the policy runs: the old select-then-retry path
+    advanced the RoundRobin cursor twice per zombie hit, silently skewing
+    the share of the live endpoints."""
+    cp = mk_plane()
+    cp.add_model(configs.get(MODEL), instances=3, est_load_time=10.0)
+    cp.run_until(120.0)
+    rows = sorted(cp.ready_endpoints(MODEL), key=lambda e: e["id"])
+    assert len(rows) == 3
+    cp.registry[(rows[0]["node"], rows[0]["port"])].kill()
+    gw = cp.web_gateway
+    for _ in range(4):
+        assert gw.handle("sk-test", MODEL, req(out=2)) == OK
+    picks = gw.router_stats()["picks"]
+    assert picks.get(f"{rows[0]['node']}:{rows[0]['port']}") is None
+    live = [f"{e['node']}:{e['port']}" for e in rows[1:]]
+    # exact fair split across the live pair — a double-advancing cursor
+    # gives 1/3 here
+    assert sorted(picks.get(k, 0) for k in live) == [2, 2]
+
+
+def test_zombie_endpoint_prefix_aware_does_not_pin_dead():
+    """PrefixAware must never pin a fresh prefix to a dead endpoint: the
+    old path pinned on the first (unfiltered) select, then re-pinned after
+    the liveness check — burning a spurious miss and churning the map."""
+    svc = ServiceConfig(routing_policy="prefix_aware")
+    cp = mk_plane(services=svc)
+    cp.add_model(configs.get(MODEL), instances=2, est_load_time=10.0)
+    cp.run_until(120.0)
+    rows = sorted(cp.ready_endpoints(MODEL), key=lambda e: e["id"])
+    gw = cp.web_gateway
+    # the placer tie-breaks by row id: rows[0] would be the first pick
+    cp.registry[(rows[0]["node"], rows[0]["port"])].kill()
+    prompt = [7] * 64
+    assert gw.handle("sk-test", MODEL, req(prompt=prompt, out=2)) == OK
+    stats = gw.router_stats()
+    assert (stats["prefix_misses"], stats["prefix_hits"]) == (1, 0)
+    dead_key = (rows[0]["node"], rows[0]["port"])
+    assert dead_key not in gw.router._map.values()
+    # the same prefix now HITS the live pin instead of re-pinning
+    assert gw.handle("sk-test", MODEL, req(prompt=prompt, out=2)) == OK
+    assert gw.router_stats()["prefix_hits"] == 1
+
+
+def test_drained_dispatch_does_not_recharge_auth():
+    """A queued request already paid authentication at admission; every
+    drain-pass re-dispatch must run with t_auth=0.0, or each attempt
+    charges auth_cache_hit again."""
+    svc = ServiceConfig(queue_capacity=16, queue_ttl=300.0)
+    cp = mk_plane(services=svc)
+    cp.add_model(configs.get(MODEL), instances=1, est_load_time=30.0)
+    gw = cp.web_gateway
+    calls = []
+    orig = gw._route_and_forward
+
+    def spy(model_name, r, t_auth=None):
+        status = orig(model_name, r, t_auth=t_auth)
+        calls.append((t_auth, status, cp.loop.now))
+        return status
+
+    gw._route_and_forward = spy
+    r = req(out=2)
+    assert gw.handle("sk-test", MODEL, r) == QUEUED
+    cp.run_until(150.0)
+    assert r.status.value == "finished"
+    # first attempt carries the real auth latency (cold cache: db trip)...
+    assert calls[0][0] is None or calls[0][0] > 0.0
+    # ...and every queued re-dispatch is free of it
+    redispatches = calls[1:]
+    assert redispatches and all(t == 0.0 for t, _, _ in redispatches)
+    # end-to-end: engine arrival after the successful drain pays only the
+    # db trip + forward hop, with no second auth charge
+    t_ok = next(now for t, status, now in redispatches if status == OK)
+    assert r.metrics.arrival_time == pytest.approx(
+        t_ok + gw.lat.endpoint_db_trip + gw.lat.forward_hop, abs=1e-9)
+
+
+def test_drain_failed_dispatch_preserves_queue_state():
+    """A failed drain dispatch re-inserts the entry at its bucket position
+    with the queued-cost totals and WFQ virtual time untouched, and the
+    attempt is observable on the entry."""
+    q = GatewayQueue(capacity=8, ttl=60.0)
+    ok = [False]
+    sent = []
+
+    def dispatch(r):
+        if not ok[0]:
+            return 461
+        sent.append(r)
+        return 200
+
+    r1, r2 = req(n=10, out=5), req(n=20, out=5)
+    r1.tenant = r2.tenant = "uni"
+    q.offer(r1, MODEL, 0.0, dispatch=dispatch)
+    q.offer(r2, MODEL, 1.0, dispatch=dispatch)
+    cost_before = dict(q._cost[MODEL])
+    vt_before = dict(q._vt.get(MODEL, {}))
+    assert q.drain(MODEL, 5.0, can_dispatch=lambda m: True) == 0
+    assert q.depth(MODEL) == 2
+    bucket = q._q[MODEL]["uni"]
+    assert bucket[0].req is r1 and bucket[1].req is r2   # position kept
+    assert (bucket[0].attempts, bucket[1].attempts) == (1, 0)
+    assert q._cost[MODEL] == cost_before                 # cost not leaked
+    assert q._vt.get(MODEL, {}) == vt_before             # no vt advance
+    # once dispatch succeeds, the pass drains in the original order
+    ok[0] = True
+    assert q.drain(MODEL, 6.0, can_dispatch=lambda m: True) == 2
+    assert sent == [r1, r2]
+    assert q.depth(MODEL) == 0 and q.drained == 2

@@ -38,10 +38,12 @@ from benchmarks.table1 import MAX_BATCHED_TOKENS, MODEL, NODE_CONFIGS
 
 def build_plane(disaggregated: bool, total: int = 4, prefill: int = 2,
                 node: str = "GPU-L",
-                transfer_bandwidth: float = 40e9) -> ControlPlane:
+                transfer_bandwidth: float = 40e9,
+                sanitize: bool = False) -> ControlPlane:
     """One model, `total` replicas — either one unified pool or a
     prefill/decode split — deployed declaratively so the reconciler does
-    the pool bring-up exactly as production would."""
+    the pool bring-up exactly as production would.  ``sanitize`` runs the
+    plane on the TracingEventLoop (trace digest for determinism checks)."""
     # paper hardware, repo engine shape: the TPU-adapted static decode
     # batch (max_num_seqs=64, scheduler.py) is where decode residency
     # actually gates prompt admission — the contention disaggregation
@@ -52,7 +54,8 @@ def build_plane(disaggregated: bool, total: int = 4, prefill: int = 2,
                        hardware=node_cfg["hardware"],
                        num_blocks=4096, block_size=32, max_num_seqs=64,
                        max_model_len=16_384,
-                       max_prefill_tokens=MAX_BATCHED_TOKENS)
+                       max_prefill_tokens=MAX_BATCHED_TOKENS,
+                       sanitize=sanitize)
 
     from repro.engine.engine import LLMEngine
     from repro.engine.executor import SimExecutor
@@ -94,9 +97,10 @@ def build_plane(disaggregated: bool, total: int = 4, prefill: int = 2,
 
 
 def run_scenario(mode: str, n: int, seed: int = 0, total: int = 4,
-                 prefill: int = 2, node: str = "GPU-L") -> dict:
+                 prefill: int = 2, node: str = "GPU-L",
+                 sanitize: bool = False) -> dict:
     cp = build_plane(mode == "disaggregated", total=total, prefill=prefill,
-                     node=node)
+                     node=node, sanitize=sanitize)
     client = ServingClient(cp, api_key="sk-bench")
     # warm the gateway auth cache (paper does the same before measuring)
     client.completions(model=MODEL, prompt=[1] * 8, max_tokens=1,
@@ -123,6 +127,9 @@ def run_scenario(mode: str, n: int, seed: int = 0, total: int = 4,
         handoffs=cp.web_gateway.stats.handoffs,
         router=cp.web_gateway.router_stats(),
     )
+    if sanitize:
+        out["trace_digest"] = cp.loop.trace_digest()
+        out["events_run"] = cp.loop.events_run
     return out
 
 

@@ -61,9 +61,12 @@ def run(n: int = 500, node: str = "GPU-L", seed: int = 0) -> dict:
 # ---------------------------------------------------------------------------
 
 def build_skewed_plane(policy: str, node: str = "GPU-L",
-                       slow_factor: float = 0.25) -> ControlPlane:
+                       slow_factor: float = 0.25,
+                       sanitize: bool = False) -> ControlPlane:
     """Two instances of the model; every second engine runs at
-    `slow_factor` of the nominal efficiency (stragglers / mixed SKUs)."""
+    `slow_factor` of the nominal efficiency (stragglers / mixed SKUs).
+    ``sanitize`` runs the plane on the TracingEventLoop (trace digest for
+    two-run determinism checks)."""
     from repro.engine.engine import LLMEngine
     from repro.engine.executor import SimExecutor
 
@@ -75,7 +78,8 @@ def build_skewed_plane(policy: str, node: str = "GPU-L",
                        max_num_seqs=node_cfg["max_num_seqs"],
                        max_model_len=32_768,
                        max_prefill_tokens=MAX_BATCHED_TOKENS,
-                       services=ServiceConfig(routing_policy=policy))
+                       services=ServiceConfig(routing_policy=policy),
+                       sanitize=sanitize)
     built = itertools.count()
     # scale the whole chip down, not just `efficiency`: decode is memory-
     # bound in the roofline, so only a slower HBM makes the straggler

@@ -39,12 +39,17 @@ def slo_class_for(i: int) -> str:
 
 def run_slo_scenario(policy: str, n: int, seed: int = 0,
                      ramp_s: float = 30.0, sessions: int = 32,
-                     slow_factor: float = 0.25) -> dict:
+                     slow_factor: float = 0.25,
+                     sanitize: bool = False) -> dict:
     """One policy at one concurrency on the skewed plane; returns the
-    harness summary extended with per-class attainment and router stats."""
+    harness summary extended with per-class attainment and router stats.
+    With ``sanitize`` the plane runs on the TracingEventLoop and the
+    summary carries ``trace_digest`` — two runs of the same arguments
+    must produce the identical digest (tests/test_determinism.py)."""
     from repro.data.burstgpt import concurrent_burst
 
-    cp = build_skewed_plane(policy, slow_factor=slow_factor)
+    cp = build_skewed_plane(policy, slow_factor=slow_factor,
+                            sanitize=sanitize)
     client = ServingClient(cp, api_key="sk-bench")
     wl = concurrent_burst(n, seed=seed)
     rec = ClientRecorder(cp.spec.services.slo_targets)
@@ -73,6 +78,9 @@ def run_slo_scenario(policy: str, n: int, seed: int = 0,
     out = rec.summary()
     out.update(policy=policy, concurrency=n,
                router=cp.web_gateway.router_stats())
+    if sanitize:
+        out["trace_digest"] = cp.loop.trace_digest()
+        out["events_run"] = cp.loop.events_run
     return out
 
 

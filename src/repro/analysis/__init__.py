@@ -1,0 +1,31 @@
+"""repro-lint: static determinism/contract analysis for the sim stack.
+
+The simulation's determinism claim (`repro.core.simclock`) underwrites
+every A/B number in benchmarks/; this package enforces it mechanically
+with AST-level invariant checks over the sim-executed modules
+(``core/``, ``engine/``, ``api/``, ``data/``):
+
+* **R1** — no wall-clock reads or unseeded randomness in sim code
+* **R2** — no order-sensitive iteration over unordered sets
+* **R3** — closures scheduled on the EventLoop that capture
+  endpoint/instance/request-ish objects must re-check liveness
+  (the zombie-closure rule; see the PR-6 zombie-endpoint bug)
+* **R4** — status-code taxonomy and metric-key cross-checks
+  (dead/dangling metric and untabulated-status detection)
+* **LINT** — suppression hygiene (a suppression must carry a reason)
+
+CLI: ``python -m repro.analysis [paths] [--check-goldens tests/]`` —
+prints ``file:line: RULE message`` findings, exits nonzero on any.
+
+Suppressions, line-level, reason mandatory::
+
+    x = hash(k)  # repro-lint: disable=R1(why this one is safe)
+    # repro-lint: disable-next-line=R1(why this one is safe)
+    x = hash(k)
+
+The runtime half of the subsystem is `repro.core.simclock.TracingEventLoop`
+(trace digests + tie-order race detection); see docs/analysis.md.
+"""
+from repro.analysis.lint import (Finding, SIM_PACKAGES,  # noqa: F401
+                                 lint_file, lint_paths)
+from repro.analysis.crosscheck import crosscheck  # noqa: F401

@@ -104,7 +104,11 @@ class Autoscaler:
         self._pending: dict[tuple, float] = {}
         self._last_fired: dict[tuple, float] = {}
         self.fired: list[tuple] = []   # (t, config_id, rule)
-        loop.every(eval_interval, self.evaluate)
+        self._eval_task = loop.every(eval_interval, self.evaluate)
+
+    def stop(self):
+        """Tear down the periodic rule evaluation."""
+        self._eval_task.stop()
 
     def evaluate(self, now: float = None):
         now = self.loop.now if now is None else now

@@ -22,7 +22,7 @@ from repro.core.instance import VLLMInstance
 from repro.core.metrics_gateway import MetricsGateway
 from repro.core.services import (EndpointGateway, EndpointWorker, JobWorker,
                                  SlurmSubmit)
-from repro.core.simclock import EventLoop
+from repro.core.simclock import EventLoop, TracingEventLoop
 from repro.core.slurm import SimNode, SimSlurm
 from repro.core.tenancy import TenancyManager, TenantSpec
 from repro.core.web_gateway import WebGateway
@@ -53,6 +53,9 @@ class ClusterSpec:
     max_instances: int = 8
     # gateway routing policy + router-side queuing knobs
     services: ServiceConfig = field(default_factory=ServiceConfig)
+    # sanitizer mode: run the plane on a TracingEventLoop (trace digest for
+    # two-run determinism checks + tie-order/re-entrancy/heap diagnostics)
+    sanitize: bool = False
 
 
 class ControlPlane:
@@ -60,7 +63,7 @@ class ControlPlane:
                  engine_factory: Optional[Callable] = None,
                  alert_rules: Optional[list[AlertRule]] = None):
         self.spec = spec or ClusterSpec()
-        self.loop = EventLoop()
+        self.loop = TracingEventLoop() if self.spec.sanitize else EventLoop()
         self.db = Database()
         self.registry: dict[tuple, VLLMInstance] = {}
         self.model_cfgs: dict[str, ModelConfig] = {}
@@ -227,6 +230,16 @@ class ControlPlane:
         return kill
 
     # ------------------------------------------------------------------
+    def shutdown(self):
+        """Stop every periodic service tick (scrape, autoscaler, reconcile,
+        worker loops, Slurm scheduling, gateway queue drain).  Pending
+        one-shot events still run if the loop is pumped further; no NEW
+        periodic events are ever scheduled after this returns."""
+        for svc in (self.reconciler, self.autoscaler, self.metrics_gateway,
+                    self.job_worker, self.endpoint_worker, self.slurm,
+                    self.web_gateway):
+            svc.stop()
+
     def run_until(self, t: float):
         self.loop.run_until(t)
 

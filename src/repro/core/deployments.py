@@ -327,7 +327,13 @@ class Reconciler:
         self.deployments: dict[str, ModelDeployment] = {}
         self._by_config: dict[int, ModelDeployment] = {}
         self._watchers: list[Callable[[dict], None]] = []
-        loop.every(interval, self.reconcile)
+        self._tick = loop.every(interval, self.reconcile)
+
+    def stop(self):
+        """Tear down the reconcile loop: the pending tick is cancelled and
+        no further reconcile events are ever scheduled (regression-tested
+        in tests/test_determinism.py)."""
+        self._tick.stop()
 
     # ------------------------------------------------------------------
     # kubectl-shaped verbs (wrapped by repro.api.admin.AdminClient)

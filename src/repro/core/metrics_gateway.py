@@ -41,7 +41,11 @@ class MetricsGateway:
         # managed declaratively the webhook patches the deployment SPEC
         # (clamped to its min/max window) instead of mutating the DB row
         self.spec_patcher = None
-        loop.every(scrape_interval, self.scrape)
+        self._scrape_task = loop.every(scrape_interval, self.scrape)
+
+    def stop(self):
+        """Tear down the periodic scrape (no further ticks are scheduled)."""
+        self._scrape_task.stop()
 
     def attach_web_gateway(self, gw):
         """Lets the scrape fold the gateway's queued-request depth into the

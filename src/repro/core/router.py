@@ -736,8 +736,11 @@ class GatewayQueue:
             queued = sum(self._cost.get(m, {}).get(t, 0.0) for m in models)
             return (queued + extra_cost) / max(self.weight_fn(t), 1e-9)
 
-        backlogged = {t for m in models
-                      for t, b in self._q[m].items() if b}
+        # deterministic candidate order (dict.fromkeys dedup preserves
+        # bucket insertion order): a ratio tie must not be broken by set
+        # iteration order, which varies with PYTHONHASHSEED
+        backlogged = list(dict.fromkeys(
+            t for m in models for t, b in self._q[m].items() if b))
         victim_t = max(backlogged, key=ratio, default=None)
         if victim_t is None or victim_t == tenant:
             return False          # the offerer is itself the worst

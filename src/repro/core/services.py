@@ -100,8 +100,12 @@ class JobWorker:
         self.submit = submit
         self.managed: set[int] = set()   # config ids owned by the Reconciler
         self._tok = itertools.count(1)
-        loop.every(interval, self.run)
+        self._tick = loop.every(interval, self.run)
         self.loop = loop
+
+    def stop(self):
+        """Tear down the periodic count-diffing loop."""
+        self._tick.stop()
 
     def run(self, now: float):
         for cfg in list(self.db["ai_model_configurations"].rows.values()):
@@ -173,7 +177,11 @@ class EndpointWorker:
         # Web Gateway uses this to drain its router-side queue immediately
         # instead of waiting for the next drain tick
         self.on_ready = on_ready
-        loop.every(interval, self.run)
+        self._tick = loop.every(interval, self.run)
+
+    def stop(self):
+        """Tear down the periodic health-poll loop."""
+        self._tick.stop()
 
     def _health(self, job: dict) -> Optional[int]:
         eps = self.db["ai_model_endpoints"].select(endpoint_job_id=job["id"])

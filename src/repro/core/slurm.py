@@ -66,7 +66,11 @@ class SimSlurm:
         self.jobs: dict[int, SlurmJob] = {}
         self._ids = itertools.count(1000)
         self.start_latency = start_latency
-        loop.every(sched_interval, self._schedule_cycle)
+        self._sched_task = loop.every(sched_interval, self._schedule_cycle)
+
+    def stop(self):
+        """Tear down the periodic scheduling cycle."""
+        self._sched_task.stop()
 
     # ------------------------------------------------------------------
     def sbatch(self, params: dict, on_start: Callable) -> int:

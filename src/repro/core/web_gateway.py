@@ -136,15 +136,20 @@ class WebGateway:
         # entries evicted by weighted admission get a terminal 461 (same
         # wire shape as a queue-full rejection, delivered post-202)
         self.queue.on_displaced = self._on_displaced
-        self._tick_scheduled = False
+        self._queue_task = None
         self._ensure_queue_tick()
 
     # -- per-deployment policy wiring (Reconciler -> gateway) ----------------
     def _ensure_queue_tick(self):
-        if self.queue.enabled and not self._tick_scheduled:
-            self._tick_scheduled = True
-            self.loop.every(self.services.queue_drain_interval,
-                            self._queue_tick)
+        if self.queue.enabled and self._queue_task is None:
+            self._queue_task = self.loop.every(
+                self.services.queue_drain_interval, self._queue_tick)
+
+    def stop(self):
+        """Tear down the periodic queue drain/expiry tick."""
+        if self._queue_task is not None:
+            self._queue_task.stop()
+            self._queue_task = None
 
     def set_model_policy(self, model_name: str,
                          policy_name: Optional[str] = None, **kw):
@@ -428,9 +433,18 @@ class WebGateway:
         self.stats.handoffs += 1
         # the prefill endpoint's router slot is free as of now; the decode
         # hop rebinds the stream (new dispatch epoch) when it forwards
-        TokenStream.ensure(req).release_dispatch()
+        stream = TokenStream.ensure(req)
+        stream.release_dispatch()
         model = req.model
-        self.loop.call_after(delay, lambda: self._redispatch(model, req))
+
+        def dispatch_decode():
+            # the transfer window can outlive the request (queue-TTL
+            # expiry, fair-share displacement): a terminally closed stream
+            # must not be re-dispatched as a zombie decode hop
+            if not stream.closed:
+                self._redispatch(model, req)
+
+        self.loop.call_after(delay, dispatch_decode)
 
     def on_instance_lost(self, req: Request) -> bool:
         """Wired as every instance's ``lost_sink``: an instance died with
@@ -454,8 +468,16 @@ class WebGateway:
         TokenStream.ensure(req).restart()
         self.stats.disagg_retries += 1
         model = req.model
+        stream = TokenStream.ensure(req)
+
+        def dispatch_retry():
+            # same-tick queue expiry/displacement can terminally close the
+            # stream before this deferred retry fires; don't resurrect it
+            if not stream.closed:
+                self._redispatch(model, req)
+
         # deferred: kill() is still iterating the dying engine's queues
-        self.loop.call_after(0.0, lambda: self._redispatch(model, req))
+        self.loop.call_after(0.0, dispatch_retry)
         return True
 
     def _redispatch(self, model_name: str, req: Request):

@@ -79,6 +79,7 @@ class LLMEngine:
     def _sample(self, req: Request, logits: Optional[np.ndarray]) -> int:
         sp = req.sampling
         if logits is None:  # sim executor: synthesise deterministic ids
+            # repro-lint: disable-next-line=R1(int-only tuple; unsalted, PYTHONHASHSEED-independent)
             return int((hash((req.request_id, req.output_len)) % 1000) + 2)
         logits = np.asarray(logits, np.float64)
         if sp.temperature <= 1e-5:

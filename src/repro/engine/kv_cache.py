@@ -129,6 +129,7 @@ class BlockAllocator:
 
 
 def chain_hash(prev: int, tokens: tuple) -> int:
+    # repro-lint: disable-next-line=R1(ints/int-tuples only; unsalted, so chain hashes are run-stable)
     return hash((prev, tokens))
 
 

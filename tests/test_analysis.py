@@ -1,0 +1,327 @@
+"""repro-lint unit tests: each rule must fire on a minimal synthetic
+reproduction of its bug class, stay quiet on the sanctioned idiom, honour
+suppressions — and report zero findings on the actual tree (the same
+invocation CI runs as a blocking gate)."""
+from __future__ import annotations
+
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import lint_file, lint_paths
+from repro.analysis.__main__ import main as lint_main
+from repro.analysis.crosscheck import crosscheck
+from repro.analysis.lint import parse_suppressions
+
+REPO = Path(__file__).resolve().parent.parent
+SRC_REPRO = REPO / "src" / "repro"
+
+
+@pytest.fixture
+def sim_file(tmp_path):
+    """Write source into a path the linter treats as sim-executed."""
+    d = tmp_path / "repro" / "core"
+    d.mkdir(parents=True)
+
+    def write(source: str, name: str = "mod.py") -> Path:
+        p = d / name
+        p.write_text(source)
+        return p
+
+    return write
+
+
+def rules_of(findings):
+    return [f.rule for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# R1: wall clock / unseeded randomness / salted hash
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("snippet", [
+    "import time\nt = time.time()\n",
+    "import time\nt = time.monotonic()\n",
+    "from time import perf_counter\nt = perf_counter()\n",
+    "import random\nx = random.random()\n",
+    "import random\nr = random.Random()\n",
+    "from random import shuffle\nshuffle([1, 2])\n",
+    "import numpy as np\nrng = np.random.default_rng()\n",
+    "import numpy as np\nnp.random.shuffle([1])\n",
+    "import datetime\nt = datetime.datetime.now()\n",
+    "from datetime import datetime\nt = datetime.utcnow()\n",
+    "h = hash('key')\n",
+])
+def test_r1_fires(sim_file, snippet):
+    assert rules_of(lint_file(sim_file(snippet))) == ["R1"]
+
+
+@pytest.mark.parametrize("snippet", [
+    # the sanctioned forms: seeded RNGs, sim time, keyed digests
+    "import numpy as np\nrng = np.random.default_rng(0)\n",
+    "import random\nr = random.Random(42)\n",
+    "now = loop.now\n",
+    "import hashlib\nh = hashlib.sha256(b'key').hexdigest()\n",
+])
+def test_r1_quiet_on_sanctioned(sim_file, snippet):
+    assert lint_file(sim_file(snippet)) == []
+
+
+def test_r1_exempt_outside_sim_scope(tmp_path):
+    # train/ etc. run on real wall clocks by design
+    d = tmp_path / "repro" / "train"
+    d.mkdir(parents=True)
+    p = d / "loop.py"
+    p.write_text("import time\nt = time.time()\n")
+    assert lint_file(p) == []
+
+
+# ---------------------------------------------------------------------------
+# R2: order-sensitive consumption of unordered sets
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("snippet", [
+    "s = {1, 2}\nfor x in s:\n    print(x)\n",
+    "s = set()\nbest = max(s)\n",
+    "s = {1}\nitems = list(s)\n",
+    "s = {1}\nout = [x for x in s]\n",
+    "s = {1}\nx = s.pop()\n",
+    "a = {1}\nb = {2}\nfor x in a | b:\n    print(x)\n",
+])
+def test_r2_fires(sim_file, snippet):
+    assert "R2" in rules_of(lint_file(sim_file(snippet)))
+
+
+@pytest.mark.parametrize("snippet", [
+    "s = {1, 2}\nfor x in sorted(s):\n    print(x)\n",    # sanctioned
+    "s = {1, 2}\nok = 1 in s\n",                          # membership
+    "d = {'a': 1}\nfor k in d:\n    print(k)\n",          # dicts ordered
+    "s = {1}\nt = {x * 2 for x in s}\n",                  # set -> set
+])
+def test_r2_quiet_on_sanctioned(sim_file, snippet):
+    assert lint_file(sim_file(snippet)) == []
+
+
+def test_r2_tracks_self_attrs(sim_file):
+    src = (
+        "class Pool:\n"
+        "    def __init__(self):\n"
+        "        self.members = set()\n"
+        "    def first(self):\n"
+        "        return next(iter(self.members))\n"
+    )
+    assert "R2" in rules_of(lint_file(sim_file(src)))
+
+
+# ---------------------------------------------------------------------------
+# R3: zombie closures scheduled on the EventLoop
+# ---------------------------------------------------------------------------
+
+def test_r3_fires_on_unguarded_lambda(sim_file):
+    src = (
+        "def dispatch(loop, endpoint):\n"
+        "    loop.call_after(1.0, lambda: endpoint.send())\n"
+    )
+    findings = lint_file(sim_file(src))
+    assert rules_of(findings) == ["R3"]
+    assert "endpoint" in findings[0].message
+
+
+def test_r3_quiet_on_guarded_lambda(sim_file):
+    src = (
+        "def dispatch(loop, endpoint):\n"
+        "    loop.call_after(\n"
+        "        1.0, lambda: endpoint.send() if endpoint.alive else None)\n"
+    )
+    assert lint_file(sim_file(src)) == []
+
+
+def test_r3_resolves_local_def(sim_file):
+    src = (
+        "def retry(loop, req):\n"
+        "    def fire():\n"
+        "        req.submit()\n"
+        "    loop.call_after(5.0, fire)\n"
+    )
+    findings = lint_file(sim_file(src))
+    assert rules_of(findings) == ["R3"]
+    assert "'fire'" in findings[0].message
+
+
+def test_r3_guard_via_registry_membership(sim_file):
+    src = (
+        "def retry(loop, req, live):\n"
+        "    def fire():\n"
+        "        if req in live:\n"
+        "            req.submit()\n"
+        "    loop.call_after(5.0, fire)\n"
+    )
+    assert lint_file(sim_file(src)) == []
+
+
+def test_r3_self_method_on_instance_class(sim_file):
+    src = (
+        "class Instance:\n"
+        "    def step(self):\n"
+        "        self.engine.step()\n"
+        "    def kick(self, loop):\n"
+        "        loop.call_after(0.1, self.step)\n"
+    )
+    assert rules_of(lint_file(sim_file(src))) == ["R3"]
+
+
+def test_r3_self_method_on_neutral_class_is_fine(sim_file):
+    # a Gateway capturing only itself is not an object that 'dies'
+    src = (
+        "class Gateway:\n"
+        "    def flush(self):\n"
+        "        self.out.flush()\n"
+        "    def kick(self, loop):\n"
+        "        loop.call_after(0.1, self.flush)\n"
+    )
+    assert lint_file(sim_file(src)) == []
+
+
+def test_r3_captures_default_arguments(sim_file):
+    # the `lambda j=job: ...` capture idiom is a capture too
+    src = (
+        "def launch(loop, job):\n"
+        "    loop.call_after(1.0, lambda j=job: j.start())\n"
+    )
+    assert rules_of(lint_file(sim_file(src))) == ["R3"]
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+def test_suppression_same_line(sim_file):
+    p = sim_file("import time\n"
+                 "t = time.time()  # repro-lint: disable=R1(boot banner)\n")
+    assert lint_file(p) == []
+
+
+def test_suppression_next_line(sim_file):
+    p = sim_file("import time\n"
+                 "# repro-lint: disable-next-line=R1(boot banner)\n"
+                 "t = time.time()\n")
+    assert lint_file(p) == []
+
+
+def test_suppression_is_rule_specific(sim_file):
+    # suppressing R2 does not silence the R1 on the same line
+    p = sim_file("import time\n"
+                 "t = time.time()  # repro-lint: disable=R2(wrong rule)\n")
+    assert rules_of(lint_file(p)) == ["R1"]
+
+
+def test_reasonless_suppression_is_a_finding(sim_file):
+    p = sim_file("import time\n"
+                 "t = time.time()  # repro-lint: disable=R1\n")
+    rules = rules_of(lint_file(p))
+    assert "LINT" in rules and "R1" in rules
+
+
+def test_parse_suppressions_multi_entry():
+    sup, bad = parse_suppressions(
+        "x = 1  # repro-lint: disable=R1(a),R2(b)\n", "f.py")
+    assert sup == {1: {"R1": "a", "R2": "b"}}
+    assert bad == []
+
+
+# ---------------------------------------------------------------------------
+# R4 cross-file checks on a synthetic mini-tree
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def mini_root(tmp_path):
+    root = tmp_path / "repro"
+    for sub in ("api", "core", "engine"):
+        (root / sub).mkdir(parents=True)
+    (root / "api" / "errors.py").write_text(
+        "ERROR_TABLE = {401: ('a', 'b'), 429: ('c', 'd')}\n"
+        "SUCCESS_STATUSES = {200: None}\n")
+    (root / "core" / "web_gateway.py").write_text(
+        "HTTP_OK = 200\nHTTP_UNAUTHORIZED = 401\n")
+    (root / "core" / "tenancy.py").write_text(
+        "HTTP_THROTTLED = 429\n")
+    (root / "engine" / "metrics.py").write_text(
+        "def snapshot(self):\n"
+        "    return {'num_running': 1, 'num_waiting': 0}\n")
+    (root / "core" / "metrics_gateway.py").write_text(
+        "def scrape(s):\n"
+        "    agg = {'queue_depth': s['num_waiting']}\n"
+        "    agg['gpu_util'] = 0.0\n"
+        "rule = AlertRule('up', metric='queue_depth', threshold=1)\n")
+    return root
+
+
+def test_r4_clean_mini_tree(mini_root):
+    assert crosscheck(mini_root) == []
+
+
+def test_r4_status_constant_outside_taxonomy(mini_root):
+    p = mini_root / "core" / "web_gateway.py"
+    p.write_text(p.read_text() + "HTTP_TEAPOT = 418\n")
+    findings = crosscheck(mini_root)
+    assert len(findings) == 1 and "418" in findings[0].message
+
+
+def test_r4_error_for_status_unknown(mini_root):
+    p = mini_root / "core" / "web_gateway.py"
+    p.write_text(p.read_text() + "err = error_for_status(503)\n")
+    findings = crosscheck(mini_root)
+    assert len(findings) == 1 and "503" in findings[0].message
+
+
+def test_r4_dangling_snapshot_read(mini_root):
+    p = mini_root / "core" / "metrics_gateway.py"
+    p.write_text(p.read_text().replace("s['num_waiting']",
+                                       "s['num_qeued']"))
+    findings = crosscheck(mini_root)
+    assert len(findings) == 1 and "num_qeued" in findings[0].message
+
+
+def test_r4_dangling_alert_metric(mini_root):
+    p = mini_root / "core" / "metrics_gateway.py"
+    p.write_text(p.read_text().replace("metric='queue_depth'",
+                                       "metric='queue_time_p95'"))
+    findings = crosscheck(mini_root)
+    assert len(findings) == 1 and "queue_time_p95" in findings[0].message
+    assert "never fire" in findings[0].message
+
+
+def test_r4_golden_table_drift(mini_root, tmp_path):
+    tests_dir = tmp_path / "tests"
+    tests_dir.mkdir()
+    (tests_dir / "test_api.py").write_text(
+        "GOLDEN = {200: None, 401: ('a',)}\n")     # 429 missing
+    findings = crosscheck(mini_root, goldens_dir=tests_dir)
+    assert len(findings) == 1 and "429" in findings[0].message
+
+
+# ---------------------------------------------------------------------------
+# CLI + the real tree (the blocking CI invocation)
+# ---------------------------------------------------------------------------
+
+def test_cli_missing_path_exits_2(capsys):
+    assert lint_main(["/nonexistent/path"]) == 2
+
+
+def test_cli_findings_exit_1(sim_file, capsys):
+    p = sim_file("import time\nt = time.time()\n")
+    assert lint_main([str(p)]) == 1
+    out = capsys.readouterr().out
+    assert str(p) in out and "R1" in out
+
+
+def test_real_tree_is_clean():
+    """The acceptance gate: `python -m repro.analysis src/repro
+    --check-goldens tests` must exit 0 on the shipped tree."""
+    findings = lint_paths([SRC_REPRO], goldens_dir=REPO / "tests")
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_real_tree_cli_exit_0(capsys):
+    assert lint_main([str(SRC_REPRO),
+                      "--check-goldens", str(REPO / "tests")]) == 0

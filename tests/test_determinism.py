@@ -1,0 +1,240 @@
+"""Dynamic determinism verification: the TracingEventLoop sanitizer.
+
+Companion to the static side in tests/test_analysis.py — `repro.analysis`
+proves the sim-executed modules *cannot* reach wall clocks or unseeded
+RNGs; the sanitizer here proves the executed schedule actually *is*
+bit-reproducible: two runs of the same scenario must fold the identical
+(seq, sim-time, callback) stream into the identical SHA-256 digest.
+
+Covers, on synthetic loops: digest equality/inequality, per-callback
+counts, tie-order race recording, the re-entrant-pump and heap-tamper
+guards, and the `EventLoop.every` cancellation handle (including the
+stopped-reconciler regression on a real control plane).  Then the two
+headline benchmark scenarios (SLO-cost routing on the skewed plane,
+disaggregated prefill/decode) run twice under `sanitize=True` and must
+agree on the digest *and* every reported metric.
+"""
+from __future__ import annotations
+
+import heapq
+
+import pytest
+
+from repro import configs
+from repro.config import ServiceConfig
+from repro.core.controller import ClusterSpec, ControlPlane
+from repro.core.simclock import (EventLoop, HeapTamperError,
+                                 ReentrantRunError, TracingEventLoop)
+
+from benchmarks.disagg import run_scenario as run_disagg
+from benchmarks.slo_routing import run_slo_scenario
+
+MODEL = "mistral-small-24b"
+
+
+# ---------------------------------------------------------------------------
+# trace digest on synthetic schedules
+# ---------------------------------------------------------------------------
+
+def _drive(loop, upto=10.0):
+    """A small deterministic schedule: periodic task + one-shots that
+    spawn follow-ups."""
+    log = []
+
+    def beat(now):
+        log.append(("beat", now))
+
+    def shot():
+        log.append(("shot", loop.now))
+        loop.call_after(0.5, lambda: log.append(("follow", loop.now)))
+
+    loop.every(1.0, beat)
+    loop.call_at(2.25, shot)
+    loop.call_at(7.75, shot)
+    loop.run_until(upto)
+    return log
+
+
+def test_identical_runs_identical_digest():
+    a, b = TracingEventLoop(), TracingEventLoop()
+    log_a, log_b = _drive(a), _drive(b)
+    assert log_a == log_b
+    assert a.events_run == b.events_run > 0
+    assert a.trace_digest() == b.trace_digest()
+    assert a.callback_counts == b.callback_counts
+
+
+def test_different_schedule_different_digest():
+    a, b = TracingEventLoop(), TracingEventLoop()
+    _drive(a)
+    _drive(b, upto=9.0)       # one fewer beat executed
+    assert a.trace_digest() != b.trace_digest()
+
+
+def test_callback_counts_use_qualnames():
+    loop = TracingEventLoop()
+    _drive(loop)
+    # the periodic tick is named after its real callback
+    every_keys = [k for k in loop.callback_counts if k.endswith("[every]")]
+    assert len(every_keys) == 1
+    assert loop.callback_counts[every_keys[0]] == 10
+
+
+def test_plain_loop_has_no_tracing_overhead_attrs():
+    # the default loop stays uninstrumented: sanitize is strictly opt-in
+    loop = EventLoop()
+    assert not hasattr(loop, "trace_digest")
+
+
+# ---------------------------------------------------------------------------
+# race / misuse detection
+# ---------------------------------------------------------------------------
+
+def test_tie_order_race_is_recorded():
+    loop = TracingEventLoop()
+    shared = {"n": 0}
+
+    def bump_a():
+        shared["n"] += 1
+
+    def bump_b():
+        shared["n"] *= 2       # result depends on who runs first
+
+    loop.call_at(5.0, bump_a)
+    loop.call_at(5.0, bump_b)  # same timestamp, same captured dict
+    loop.run_until(10.0)
+    assert loop.tie_collision_count == 1
+    at, first, second = loop.tie_collisions[0]
+    assert at == 5.0
+    assert "bump_a" in first and "bump_b" in second
+
+
+def test_disjoint_tie_is_not_a_race():
+    loop = TracingEventLoop()
+    a, b = {"n": 0}, {"n": 0}
+    loop.call_at(5.0, lambda: a.update(n=1))
+    loop.call_at(5.0, lambda: b.update(n=1))
+    loop.run_until(10.0)
+    assert loop.tie_collision_count == 0
+
+
+def test_reentrant_run_raises():
+    loop = TracingEventLoop()
+    loop.call_at(1.0, lambda: loop.run_until(2.0))
+    with pytest.raises(ReentrantRunError):
+        loop.run_until(5.0)
+
+
+def test_heap_tamper_raises():
+    loop = TracingEventLoop()
+
+    def tamper():
+        # bypass call_at: push a raw entry straight onto the heap
+        from repro.core.simclock import _Event
+        heapq.heappush(loop._heap, _Event(2.0, 10 ** 9, lambda: None))
+
+    loop.call_at(1.0, tamper)
+    with pytest.raises(HeapTamperError, match="tamper"):
+        loop.run_until(5.0)
+
+
+# ---------------------------------------------------------------------------
+# EventLoop.every cancellation handle
+# ---------------------------------------------------------------------------
+
+def test_every_handle_stops_rechain():
+    loop = EventLoop()
+    ticks = []
+    handle = loop.every(1.0, ticks.append)
+    loop.run_until(3.5)
+    assert ticks == [1.0, 2.0, 3.0]
+    handle.stop()
+    loop.run_until(10.0)
+    assert ticks == [1.0, 2.0, 3.0]
+    assert not loop._heap      # nothing left pending
+
+
+def test_every_handle_stop_from_inside_tick():
+    loop = EventLoop()
+    ticks = []
+    handle = loop.every(1.0, lambda now: (ticks.append(now),
+                                          handle.stop() if now >= 2.0
+                                          else None))
+    loop.run_until(10.0)
+    assert ticks == [1.0, 2.0]
+
+
+def test_stopped_reconciler_schedules_no_further_events():
+    """Regression (PR-6 zombie-endpoint class): a stopped periodic service
+    must go quiet, not re-arm itself forever."""
+    spec = ClusterSpec(num_nodes=2, gpus_per_node=2, max_num_seqs=16,
+                       num_blocks=512, block_size=16, max_model_len=2048,
+                       sanitize=True)
+    cp = ControlPlane(spec)
+    cp.add_tenant("uni", "sk-test")
+    cp.register_model(configs.get(MODEL))
+    cp.run_until(120.0)
+    key = "Reconciler.reconcile [every]"
+    assert cp.loop.callback_counts.get(key, 0) > 0
+    cp.reconciler.stop()
+    before = cp.loop.callback_counts[key]
+    cp.run_until(cp.loop.now + 600.0)
+    assert cp.loop.callback_counts[key] == before
+
+
+def test_shutdown_quiesces_the_whole_plane():
+    spec = ClusterSpec(num_nodes=2, gpus_per_node=2, max_num_seqs=16,
+                       num_blocks=512, block_size=16, max_model_len=2048,
+                       sanitize=True)
+    cp = ControlPlane(spec)
+    cp.add_tenant("uni", "sk-test")
+    cp.register_model(configs.get(MODEL))
+    cp.run_until(120.0)
+    cp.shutdown()
+    before = cp.loop.events_run
+    cp.run_until(cp.loop.now + 3600.0)
+    # every periodic service holds a handle; after shutdown the heap
+    # drains completely instead of the tick chains re-arming forever
+    assert cp.loop.events_run == before
+    assert not cp.loop._heap
+
+
+# ---------------------------------------------------------------------------
+# two-run digest equality on the benchmark scenarios
+# ---------------------------------------------------------------------------
+
+def _strip_volatile(row: dict) -> dict:
+    return {k: v for k, v in row.items() if k != "router"}
+
+
+def _assert_twin_runs(run, *args, **kw):
+    a = run(*args, sanitize=True, **kw)
+    b = run(*args, sanitize=True, **kw)
+    assert a["trace_digest"] == b["trace_digest"], \
+        "same scenario, different event trace — nondeterminism"
+    assert a["events_run"] == b["events_run"]
+    assert _strip_volatile(a) == _strip_volatile(b)
+    return a
+
+
+def test_slo_routing_twin_runs_bit_identical():
+    row = _assert_twin_runs(run_slo_scenario, "slo_cost", 20)
+    for cls in ("interactive", "standard", "batch"):
+        assert f"slo_attainment_{cls}" in row
+
+
+def test_disagg_twin_runs_bit_identical():
+    row = _assert_twin_runs(run_disagg, "disaggregated", 20)
+    assert row["handoffs"] > 0    # the two-hop path actually ran
+
+
+@pytest.mark.slow
+def test_slo_routing_twin_runs_n100():
+    row = _assert_twin_runs(run_slo_scenario, "slo_cost", 100)
+    assert row["events_run"] > 1000
+
+
+@pytest.mark.slow
+def test_disagg_twin_runs_n100():
+    row = _assert_twin_runs(run_disagg, "disaggregated", 100)
+    assert row["handoffs"] > 0

@@ -92,6 +92,10 @@ class _RequestBase:
     # benchmark harness reports SLO attainment against the class targets
     slo_class: str = "standard"
     session_id: Optional[str] = None
+    # multi-agent workflow key: all stages of one agent pipeline carry the
+    # same id so workflow-affinity routing can pin them to one instance
+    # for cross-agent KV reuse (repro.core.kvstore / docs/kv_store.md)
+    workflow_id: Optional[str] = None
     seed: int = 0
     stop_token: Optional[int] = None
     # benchmark mode: stop exactly at this many output tokens (BurstGPT)
@@ -119,6 +123,9 @@ class _RequestBase:
         if self.session_id is not None \
                 and not isinstance(self.session_id, str):
             _fail("session_id", "session_id must be a string or null")
+        if self.workflow_id is not None \
+                and not isinstance(self.workflow_id, str):
+            _fail("workflow_id", "workflow_id must be a string or null")
         if type(self.max_tokens) is not int or self.max_tokens < 1:
             _fail("max_tokens",
                   f"max_tokens {self.max_tokens!r} must be an int >= 1")
@@ -139,13 +146,15 @@ class _RequestBase:
                 "n": self.n,
                 "stream": self.stream, "priority": self.priority,
                 "slo_class": self.slo_class,
-                "session_id": self.session_id, "seed": self.seed,
+                "session_id": self.session_id,
+                "workflow_id": self.workflow_id, "seed": self.seed,
                 "stop_token": self.stop_token,
                 "target_output_len": self.target_output_len}
 
     def _engine_request(self, prompt_tokens: list) -> Request:
         return Request(prompt_tokens=prompt_tokens, model=self.model,
-                       session_id=self.session_id, priority=self.priority,
+                       session_id=self.session_id,
+                       workflow_id=self.workflow_id, priority=self.priority,
                        slo_class=self.slo_class,
                        sampling=self._sampling())
 
@@ -215,7 +224,7 @@ class CompletionRequest(_RequestBase):
                    temperature=sp.temperature, top_k=sp.top_k, top_p=sp.top_p,
                    max_tokens=sp.max_new_tokens, stream=stream,
                    priority=req.priority, slo_class=req.slo_class,
-                   session_id=req.session_id,
+                   session_id=req.session_id, workflow_id=req.workflow_id,
                    seed=sp.seed, stop_token=sp.stop_token,
                    target_output_len=sp.target_output_len)
 

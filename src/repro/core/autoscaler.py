@@ -41,6 +41,18 @@ class AlertRule:
             else value < self.threshold
 
 
+def rule_from_dict(d: dict) -> AlertRule:
+    """Build an AlertRule from its manifest form — the entries of
+    `ModelDeploymentSpec.alert_rules` (per-deployment overrides of the
+    global rule set; validated at apply time by the spec)."""
+    return AlertRule(name=d["name"], metric=d["metric"], op=d["op"],
+                     threshold=float(d["threshold"]),
+                     for_duration=float(d["for_duration"]),
+                     delta=int(d["delta"]),
+                     cooldown=float(d.get("cooldown", 60.0)),
+                     pool=d.get("pool"))
+
+
 QUEUE_TIME_SCALE_UP = AlertRule(
     name="queue_time>5s_for_30s", metric="queue_time_max", op="gt",
     threshold=5.0, for_duration=30.0, delta=+1, cooldown=60.0)
@@ -100,6 +112,10 @@ class Autoscaler:
                   TENANT_QUEUE_SCALE_UP,
                   PREFILL_QUEUE_SCALE_UP, DECODE_QUEUE_SCALE_UP,
                   IDLE_SCALE_DOWN]
+        # per-deployment rule overrides: fn(config_id) -> list[AlertRule]
+        # or None to fall back to the global `rules` (injected by the
+        # ControlPlane, which resolves ModelDeploymentSpec.alert_rules)
+        self.rules_for = None
         # (config_id, rule name) -> breach start time
         self._pending: dict[tuple, float] = {}
         self._last_fired: dict[tuple, float] = {}
@@ -113,7 +129,9 @@ class Autoscaler:
     def evaluate(self, now: float = None):
         now = self.loop.now if now is None else now
         for cfg_id in list(self.gw.history.keys()):
-            for rule in self.rules:
+            override = self.rules_for(cfg_id) \
+                if self.rules_for is not None else None
+            for rule in (override if override is not None else self.rules):
                 key = (cfg_id, rule.name)
                 series = self.gw.series(cfg_id, rule.metric,
                                         now - rule.for_duration - 1e-9)

@@ -15,10 +15,11 @@ from typing import Callable, Optional
 
 from repro.config import (GPU_H100, HardwareConfig, ModelConfig,
                           ServiceConfig)
-from repro.core.autoscaler import Autoscaler, AlertRule
+from repro.core.autoscaler import Autoscaler, AlertRule, rule_from_dict
 from repro.core.db import Database
 from repro.core.deployments import Reconciler
 from repro.core.instance import VLLMInstance
+from repro.core.kvstore import TierCache, make_tier_store
 from repro.core.metrics_gateway import MetricsGateway
 from repro.core.services import (EndpointGateway, EndpointWorker, JobWorker,
                                  SlurmSubmit)
@@ -114,6 +115,14 @@ class ControlPlane:
             default_max_model_len=self.spec.max_model_len,
             known_models=lambda m: m in self.model_cfgs)
         self.metrics_gateway.spec_patcher = self.reconciler.patch_replicas
+        # per-deployment observability overrides (ModelDeploymentSpec
+        # prometheus_labels / alert_rules) resolved through the reconciler
+        self.metrics_gateway.deployment_labels = self._deployment_labels
+        self.autoscaler.rules_for = self._alert_rules_for
+        # cluster-wide shared KV store tier, one per model: every replica's
+        # TieredKVStore writes through to it, so a prefix demoted on one
+        # instance is promotable on another (hierarchical KV, paper §KV)
+        self.shared_kv: dict[str, TierCache] = {}
 
     # ------------------------------------------------------------------
     def add_tenant(self, name: str, api_key: str,
@@ -147,6 +156,42 @@ class ControlPlane:
             est_load_time=est_load_time,
             max_model_len=max_model_len or self.spec.max_model_len,
             slurm_partition=self.spec.partition)
+
+    # ------------------------------------------------------------------
+    def _deployment_labels(self, model_name: str) -> Optional[dict]:
+        """Per-deployment extra Prometheus target labels
+        (`ModelDeploymentSpec.prometheus_labels`); None for models not
+        under declarative management."""
+        dep = self.reconciler.deployments.get(model_name)
+        if dep is None:
+            return None
+        return dep.spec.prometheus_labels
+
+    def _alert_rules_for(self, config_id) -> Optional[list[AlertRule]]:
+        """Per-deployment alert-rule overrides
+        (`ModelDeploymentSpec.alert_rules`); None falls back to the
+        autoscaler's global rule set."""
+        dep = self.reconciler._by_config.get(config_id)
+        if dep is None or dep.spec.alert_rules is None:
+            return None
+        return [rule_from_dict(r) for r in dep.spec.alert_rules]
+
+    def _tier_store_for(self, model_name: str):
+        """Build one engine's lower KV tiers from the deployment's
+        `KVStoreSpec`: a private host-DRAM tier plus the model's
+        cluster-wide shared tier (lazily created here, then reused by
+        every replica of the model).  None when tiering is off."""
+        dep = self.reconciler.deployments.get(model_name)
+        kspec = dep.spec.kv_store if dep is not None else None
+        if kspec is None:
+            return None
+        shared = None
+        if kspec.shared_blocks > 0:
+            shared = self.shared_kv.get(model_name)
+            if shared is None:
+                shared = self.shared_kv[model_name] = TierCache(
+                    kspec.shared_blocks, name="shared")
+        return make_tier_store(kspec, shared)
 
     # ------------------------------------------------------------------
     def _roofline(self, model_name: str):
@@ -208,6 +253,10 @@ class ControlPlane:
             return lambda: None
         cfg = self.model_cfgs[params["model"]]
         engine = self._engine_factory(cfg, int(params.get("gpus", 1)))
+        # hierarchical KV: hang the host+shared tiers off the allocator so
+        # eviction demotes and match_prefix misses promote (default off —
+        # the legacy add_model path has no deployment spec, hence no tiers)
+        engine.allocator.tier_store = self._tier_store_for(params["model"])
         if phase is not None:
             # pool member: specialise the engine and wire the prefill
             # handoff back into the gateway's two-hop path

@@ -43,6 +43,7 @@ from repro.api.errors import check_number as _check_number
 from repro.api.errors import raise_validation as _fail
 from repro.core.db import Database
 from repro.core.disagg import DisaggProfile, DisaggregationSpec
+from repro.core.kvstore import KVStoreSpec
 from repro.core.router import POLICIES, endpoint_key
 from repro.core.simclock import EventLoop
 from repro.core.slurm import JobState, SimSlurm
@@ -95,6 +96,17 @@ class ModelDeploymentSpec:
     # With a block set, `replicas` is inert — each pool has its own
     # replica window and the deployment reconciles both.
     disaggregation: Optional[DisaggregationSpec] = None
+    # hierarchical KV tier sizing (repro.core.kvstore); None = evicted
+    # prompt KV is discarded, the pre-tiering behaviour
+    kv_store: Optional[KVStoreSpec] = None
+    # extra static labels stamped on this deployment's Prometheus scrape
+    # targets (team/cost-center/dashboard routing); reserved target keys
+    # (model, phase, __bearer__, ...) always win on collision
+    prometheus_labels: Optional[dict] = None
+    # per-deployment alert-rule overrides: a list of AlertRule manifests
+    # (repro.core.autoscaler.rule_from_dict) replacing the GLOBAL rule
+    # set for this deployment's config; None inherits the global rules
+    alert_rules: Optional[list] = None
 
     def validate(self):
         """Strict field-addressed validation — violations raise a 422
@@ -146,6 +158,62 @@ class ModelDeploymentSpec:
                       "disaggregation must be a DisaggregationSpec (or its "
                       "dict manifest form) or null")
             self.disaggregation.validate()
+        if self.kv_store is not None:
+            if not isinstance(self.kv_store, KVStoreSpec):
+                _fail("kv_store",
+                      "kv_store must be a KVStoreSpec (or its dict "
+                      "manifest form) or null")
+            self.kv_store.validate()
+        if self.prometheus_labels is not None:
+            if not isinstance(self.prometheus_labels, dict):
+                _fail("prometheus_labels",
+                      "prometheus_labels must be a dict of string labels "
+                      "or null")
+            for k, v in self.prometheus_labels.items():
+                if not isinstance(k, str) or not k or not isinstance(v, str):
+                    _fail(f"prometheus_labels.{k}",
+                          "prometheus label names must be non-empty strings "
+                          "and values strings")
+        if self.alert_rules is not None:
+            if not isinstance(self.alert_rules, list):
+                _fail("alert_rules",
+                      "alert_rules must be a list of alert-rule manifests "
+                      "or null")
+            for i, r in enumerate(self.alert_rules):
+                self._validate_alert_rule(r, f"alert_rules[{i}]")
+
+    @staticmethod
+    def _validate_alert_rule(r, param: str):
+        """One alert-rule manifest (repro.core.autoscaler.rule_from_dict
+        consumes the validated form)."""
+        if not isinstance(r, dict):
+            _fail(param, "alert-rule manifests must be dicts")
+        required = ("name", "metric", "op", "threshold", "for_duration",
+                    "delta")
+        known = set(required) | {"cooldown", "pool"}
+        unknown = sorted(set(r) - known)
+        if unknown:
+            _fail(f"{param}.{unknown[0]}",
+                  f"unknown field(s) {unknown} in alert-rule manifest")
+        for k in required:
+            if k not in r:
+                _fail(f"{param}.{k}",
+                      f"alert-rule manifest requires {k!r}")
+        if not isinstance(r["name"], str) or not r["name"]:
+            _fail(f"{param}.name", "name must be a non-empty string")
+        if not isinstance(r["metric"], str) or not r["metric"]:
+            _fail(f"{param}.metric", "metric must be a non-empty string")
+        if r["op"] not in ("gt", "lt"):
+            _fail(f"{param}.op", f"op {r['op']!r} must be 'gt' or 'lt'")
+        _check_number(r["threshold"], f"{param}.threshold")
+        _check_number(r["for_duration"], f"{param}.for_duration",
+                      minimum=0.0)
+        _check_int(r["delta"], f"{param}.delta")
+        if "cooldown" in r:
+            _check_number(r["cooldown"], f"{param}.cooldown", minimum=0.0)
+        if r.get("pool") not in (None, "prefill", "decode"):
+            _fail(f"{param}.pool",
+                  f"pool {r['pool']!r} must be 'prefill', 'decode' or null")
 
     def template(self) -> tuple:
         """The replica template: fields whose change requires replacing
@@ -170,7 +238,13 @@ class ModelDeploymentSpec:
                 "max_surge": self.max_surge,
                 "max_unavailable": self.max_unavailable,
                 "disaggregation": None if self.disaggregation is None
-                else self.disaggregation.to_dict()}
+                else self.disaggregation.to_dict(),
+                "kv_store": None if self.kv_store is None
+                else self.kv_store.to_dict(),
+                "prometheus_labels": None if self.prometheus_labels is None
+                else dict(self.prometheus_labels),
+                "alert_rules": None if self.alert_rules is None
+                else [dict(r) for r in self.alert_rules]}
 
     @classmethod
     def from_dict(cls, d: dict) -> "ModelDeploymentSpec":
@@ -184,6 +258,8 @@ class ModelDeploymentSpec:
         if isinstance(d.get("disaggregation"), dict):
             d["disaggregation"] = DisaggregationSpec.from_dict(
                 d["disaggregation"])
+        if isinstance(d.get("kv_store"), dict):
+            d["kv_store"] = KVStoreSpec.from_dict(d["kv_store"])
         return cls(**d)
 
 
@@ -555,7 +631,8 @@ class Reconciler:
                 inner=dep.spec.routing_policy or "least_loaded")
             self.gateway.set_model_disaggregation(dep.name, DisaggProfile(
                 transfer_bandwidth=dis.transfer_bandwidth,
-                max_retries=dis.max_retries))
+                max_retries=dis.max_retries,
+                stream_chunks=dis.stream_chunks))
         else:
             self.gateway.set_model_policy(dep.name, dep.spec.routing_policy)
             self.gateway.set_model_disaggregation(dep.name, None)

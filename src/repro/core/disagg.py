@@ -77,6 +77,10 @@ class DisaggregationSpec:
     transfer_bandwidth: float = 40e9
     # transparent prefill-hop re-runs after an instance dies mid-stream
     max_retries: int = 2
+    # chunked handoff streaming (repro.core.kvstore.LinkContentionModel):
+    # the payload moves in this many chunks and the decode hop dispatches
+    # after the FIRST one lands; 1 reproduces PR 4's atomic handoff
+    stream_chunks: int = 8
 
     def validate(self, param: str = "disaggregation"):
         for pool in PHASES:
@@ -100,6 +104,7 @@ class DisaggregationSpec:
                   f"transfer_bandwidth {self.transfer_bandwidth!r} must be "
                   f"a number > 0 (bytes/s)")
         _check_int(self.max_retries, f"{param}.max_retries", minimum=0)
+        _check_int(self.stream_chunks, f"{param}.stream_chunks", minimum=1)
 
     def window(self, pool: str) -> tuple:
         return (getattr(self, f"min_{pool}_replicas"),
@@ -117,7 +122,8 @@ class DisaggregationSpec:
                 "min_decode_replicas": self.min_decode_replicas,
                 "max_decode_replicas": self.max_decode_replicas,
                 "transfer_bandwidth": self.transfer_bandwidth,
-                "max_retries": self.max_retries}
+                "max_retries": self.max_retries,
+                "stream_chunks": self.stream_chunks}
 
     @classmethod
     def from_dict(cls, d: dict) -> "DisaggregationSpec":
@@ -136,8 +142,11 @@ class DisaggProfile:
     deployment's `DisaggregationSpec`, or installed directly)."""
     transfer_bandwidth: float = 40e9
     max_retries: int = 2
+    stream_chunks: int = 8
 
     def transfer_time(self, handoff: KVHandoff) -> float:
+        """Uncontended whole-payload duration (the chunked path charges
+        per chunk through the shared link and sums to this when idle)."""
         return handoff.kv_bytes / self.transfer_bandwidth
 
 

@@ -41,6 +41,10 @@ class MetricsGateway:
         # managed declaratively the webhook patches the deployment SPEC
         # (clamped to its min/max window) instead of mutating the DB row
         self.spec_patcher = None
+        # fn(model_name) -> dict of extra Prometheus target labels or None
+        # (ModelDeploymentSpec.prometheus_labels, injected by ControlPlane);
+        # core labels always win over the overrides
+        self.deployment_labels = None
         self._scrape_task = loop.every(scrape_interval, self.scrape)
 
     def stop(self):
@@ -65,9 +69,12 @@ class MetricsGateway:
             if ep["ready_at"] is None:
                 continue
             job = self.db["ai_model_endpoint_jobs"].get(ep["endpoint_job_id"])
+            extra = self.deployment_labels(ep["model_name"]) \
+                if self.deployment_labels is not None else None
             out.append({
                 "targets": [f"{ep['node']}:{ep['port']}"],
                 "labels": {
+                    **(extra or {}),
                     "model": ep["model_name"],
                     "model_version": str(ep["model_version"]),
                     "phase": ep.get("phase") or "unified",
@@ -146,6 +153,17 @@ class MetricsGateway:
                         sum(s.get("prefix_hits_total", 0) for s in snaps)
                         / max(sum(s.get("prefix_queries_total", 0)
                                   for s in snaps), 1)),
+                    # hierarchical KV store (repro.core.kvstore): per-tier
+                    # traffic across the config's engines — flat zeros when
+                    # tiering is off (the engines report 0 without a store)
+                    "kv_demotions_total": sum(
+                        s.get("kv_demotions_total", 0) for s in snaps),
+                    "kv_promotions_total": sum(
+                        s.get("kv_promotions_total", 0) for s in snaps),
+                    "kv_host_hits_total": sum(
+                        s.get("kv_host_hits_total", 0) for s in snaps),
+                    "kv_shared_hits_total": sum(
+                        s.get("kv_shared_hits_total", 0) for s in snaps),
                 }
                 # disaggregated pools: per-phase depths so the autoscaler's
                 # pool-addressed rules can grow prefill and decode capacity

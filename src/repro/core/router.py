@@ -201,6 +201,8 @@ class SessionAffinity(RoutingPolicy):
     """
 
     name = "session_affinity"
+    #: request attribute carrying the affinity key (subclasses override)
+    affinity_attr = "session_id"
 
     def __init__(self, replicas: int = 64):
         super().__init__()
@@ -230,7 +232,7 @@ class SessionAffinity(RoutingPolicy):
         self._ring_for = keys
 
     def select(self, eps: list[dict], req: Request) -> dict:
-        key = getattr(req, "session_id", None)
+        key = getattr(req, self.affinity_attr, None)
         if key is None:
             self.fallbacks += 1
             return self._fallback.select(eps, req)
@@ -249,6 +251,35 @@ class SessionAffinity(RoutingPolicy):
     def stats(self) -> dict:
         out = super().stats()
         out.update(affinity_hits=self.affinity_hits, fallbacks=self.fallbacks)
+        return out
+
+
+class WorkflowAffinity(SessionAffinity):
+    """Consistent hashing on the request's workflow key.
+
+    A multi-agent pipeline issues a chain of requests whose prompts share
+    a growing context (`repro.data.burstgpt.agent_pipeline`): every stage
+    extends the transcript the previous stage produced.  Pinning all
+    stages of a workflow to one instance lets each agent's prefill reuse
+    the previous agents' sealed KV blocks — and, with the kvstore tiers
+    (docs/kv_store.md), even blocks already demoted off HBM.  The ring is
+    tenant-namespaced exactly like session affinity.  Requests without a
+    ``workflow_id`` degrade to session affinity, then round-robin, so one
+    policy serves mixed workflow/chat/one-shot traffic.
+    """
+
+    name = "workflow_affinity"
+    affinity_attr = "workflow_id"
+
+    def __init__(self, replicas: int = 64):
+        super().__init__(replicas=replicas)
+        self._fallback = SessionAffinity(replicas=replicas)
+
+    def stats(self) -> dict:
+        out = super().stats()
+        out["session_fallback"] = {
+            "affinity_hits": self._fallback.affinity_hits,
+            "fallbacks": self._fallback.fallbacks}
         return out
 
 
@@ -502,6 +533,7 @@ POLICIES = {
     "round_robin": RoundRobin,
     "least_loaded": LeastLoaded,
     "session_affinity": SessionAffinity,
+    "workflow_affinity": WorkflowAffinity,
     "prefix_aware": PrefixAware,
     "slo_cost": SLOCostRouter,
 }

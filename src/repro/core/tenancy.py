@@ -167,6 +167,11 @@ class TenancyManager:
         # tenants deleted while requests were still in flight: their
         # in-memory accounting is reaped once the last request closes
         self._deleted: set = set()
+        # adaptive max_inflight backpressure: EW-smoothed inter-completion
+        # gap per tenant — a slot frees roughly once per gap, so it is the
+        # honest retry_after hint for an in-flight-full 429
+        self._last_done: dict[str, float] = {}
+        self._done_gap: dict[str, float] = {}
         self._load()
 
     # -- spec administration (AdminClient verbs) -----------------------------
@@ -254,6 +259,8 @@ class TenancyManager:
             self.inflight.pop(name, None)
         self.totals.pop(name, None)
         self.rejections.pop(name, None)
+        self._last_done.pop(name, None)
+        self._done_gap.pop(name, None)
         tenant = self._tenant_row(name)
         if tenant is not None:
             for row in self.db["identity_tenant_policies"].select(
@@ -291,8 +298,13 @@ class TenancyManager:
             if spec.max_inflight is not None \
                     and self.inflight.get(name, 0) >= spec.max_inflight:
                 self.rejections[name] = self.rejections.get(name, 0) + 1
+                # hint the observed completion cadence: a slot frees about
+                # once per smoothed inter-completion gap (1 s until the
+                # tenant has finished anything this run)
+                gap = self._done_gap.get(name)
+                retry = 1.0 if gap is None else min(60.0, max(0.05, gap))
                 return error_for_status(
-                    TENANT_QUOTA_EXCEEDED, retry_after=1.0,
+                    TENANT_QUOTA_EXCEEDED, retry_after=retry,
                     message=f"Tenant {name!r} has {spec.max_inflight} "
                             f"requests in flight (max_inflight).")
             rb = self._req_buckets.get(name)
@@ -342,6 +354,14 @@ class TenancyManager:
             failed = req.status == RequestStatus.FAILED
         if m.finish_time is not None:      # engine-recorded accounting
             prompt, completion = m.prompt_tokens, m.completion_tokens
+            # admission charged prompt + TARGET output; an early stop (EOS,
+            # client stop strings) used less — flow the surplus back into
+            # the tokens/min bucket so conservative max_tokens settings
+            # don't eat the tenant's real throughput budget
+            surplus = self.charge(req) - (prompt + completion)
+            tb = self._tok_buckets.get(name)
+            if surplus > 0 and tb is not None:
+                tb.level = min(tb.capacity, tb.level + surplus)
         elif m.first_scheduled_time is not None:
             # died mid-service (instance loss): the prefill and any
             # streamed tokens were real work
@@ -395,6 +415,14 @@ class TenancyManager:
         t["completion_tokens"] += completion
         t["queue_wait"] += wait
         t["kv_transfer_time"] += m.kv_transfer_time
+        # completion cadence for the adaptive max_inflight retry_after
+        last = self._last_done.get(name)
+        self._last_done[name] = now
+        if last is not None:
+            dt = max(0.0, now - last)
+            old = self._done_gap.get(name)
+            self._done_gap[name] = dt if old is None \
+                else 0.8 * old + 0.2 * dt
         if name in self._deleted and not self.inflight.get(name):
             # last in-flight request of a deleted tenant closed: reap the
             # in-memory accounting so the scrape stops walking a ghost
@@ -403,6 +431,8 @@ class TenancyManager:
             self.inflight.pop(name, None)
             self.totals.pop(name, None)
             self.rejections.pop(name, None)
+            self._last_done.pop(name, None)
+            self._done_gap.pop(name, None)
 
     # -- reporting -----------------------------------------------------------
     def tracked(self) -> list:

@@ -40,6 +40,7 @@ from repro.api.streaming import TokenStream
 from repro.config import ServiceConfig
 from repro.core.db import Database
 from repro.core.disagg import DisaggProfile
+from repro.core.kvstore import LinkContentionModel, chunk_plan
 from repro.core.router import GatewayQueue, endpoint_key, make_policy
 from repro.core.simclock import EventLoop
 from repro.engine.request import Request, RequestStatus
@@ -112,6 +113,9 @@ class WebGateway:
         self.stats = GatewayStats()
         # per-model disaggregation profiles (two-hop prefill/decode routing)
         self._disagg: dict[str, DisaggProfile] = {}
+        # per-model shared-NIC link models (repro.core.kvstore): chunked
+        # handoffs of one deployment queue on its link's bandwidth
+        self._kv_links: dict[str, LinkContentionModel] = {}
         svc = self.services
         self._load_fn = load_fn
         # fn(model, req) -> roofline (ttft, tbt) prior, from the control
@@ -181,6 +185,7 @@ class WebGateway:
         model's `disaggregated` routing policy (set_model_policy)."""
         if profile is None:
             self._disagg.pop(model_name, None)
+            self._kv_links.pop(model_name, None)
         else:
             self._disagg[model_name] = profile
 
@@ -420,31 +425,68 @@ class WebGateway:
         self.stats.forwarded += 1
 
     # -- disaggregated prefill/decode (repro.core.disagg) --------------------
+    def _kv_link(self, model_name: str,
+                 prof: DisaggProfile) -> LinkContentionModel:
+        """One shared-NIC link per deployment: every handoff of the model
+        queues its chunks on this link's bandwidth (recreated when the
+        profile's ``transfer_bandwidth`` knob changes)."""
+        link = self._kv_links.get(model_name)
+        if link is None or link.bandwidth != prof.transfer_bandwidth:
+            link = LinkContentionModel(prof.transfer_bandwidth)
+            self._kv_links[model_name] = link
+        return link
+
     def on_prefill_handoff(self, req: Request, handoff, now: float = None):
         """Wired as the prefill-only engines' ``on_handoff``: the prefill
         hop produced the first token and exported its sealed KV blocks.
-        Charge the KV transfer against the model's bandwidth knob, then
-        dispatch the decode hop — the model's `DisaggregatedRouter` sees
-        the attached handoff and targets the decode pool."""
+        The payload streams in ``prof.stream_chunks`` chunks through the
+        model's shared-NIC `LinkContentionModel`: the decode hop
+        dispatches once the FIRST chunk lands (instead of waiting for the
+        whole payload, the old atomic model's TBT-tail cost) and each
+        later chunk is only reserved on the link after the previous one
+        completes, so simultaneous handoffs interleave and queue on
+        bandwidth honestly instead of each assuming the full
+        ``transfer_bandwidth``.  ``stream_chunks=1`` reproduces the
+        atomic behaviour (benchmarks/kvstore.py uses it as baseline)."""
+        now = self.loop.now if now is None else now
         prof = self._disagg.get(req.model) or DisaggProfile(
             transfer_bandwidth=self.services.kv_transfer_bandwidth)
-        delay = prof.transfer_time(handoff)
-        req.metrics.kv_transfer_time += delay
+        link = self._kv_link(req.model, prof)
         self.stats.handoffs += 1
         # the prefill endpoint's router slot is free as of now; the decode
         # hop rebinds the stream (new dispatch epoch) when it forwards
         stream = TokenStream.ensure(req)
         stream.release_dispatch()
         model = req.model
+        sizes = chunk_plan(handoff.kv_bytes, prof.stream_chunks)
 
-        def dispatch_decode():
-            # the transfer window can outlive the request (queue-TTL
-            # expiry, fair-share displacement): a terminally closed stream
-            # must not be re-dispatched as a zombie decode hop
-            if not stream.closed:
-                self._redispatch(model, req)
+        def send(i: int):
+            t0 = self.loop.now
+            done = link.transmit(sizes[i], t0)
+            # per-chunk charge (incl. link queueing): chunks of one
+            # handoff are back-to-back, so the sum is the true span —
+            # exactly the old atomic charge when the link is idle
+            req.metrics.kv_transfer_time += done - t0
+            if i == 0:
+                def dispatch_decode():
+                    # the transfer window can outlive the request (queue-
+                    # TTL expiry, fair-share displacement): a terminally
+                    # closed stream must not be re-dispatched as a zombie
+                    # decode hop
+                    if not stream.closed:
+                        self._redispatch(model, req)
 
-        self.loop.call_after(delay, dispatch_decode)
+                self.loop.call_after(max(0.0, done - t0), dispatch_decode)
+            if i + 1 < len(sizes):
+                def next_chunk():
+                    # a closed stream abandons its tail chunks, so a dead
+                    # request stops reserving link bandwidth
+                    if not stream.closed:
+                        send(i + 1)
+
+                self.loop.call_after(max(0.0, done - t0), next_chunk)
+
+        send(0)
 
     def on_instance_lost(self, req: Request) -> bool:
         """Wired as every instance's ``lost_sink``: an instance died with
@@ -550,6 +592,9 @@ class WebGateway:
         if self._model_routers:
             out["per_model"] = {name: r.stats()
                                 for name, r in self._model_routers.items()}
+        if self._kv_links:
+            out["kv_links"] = {name: link.stats()
+                               for name, link in self._kv_links.items()}
         return out
 
     def _status(self, code: int) -> int:

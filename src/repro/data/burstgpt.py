@@ -144,6 +144,41 @@ def tenant_mix(n_batch: int, n_chat: int, seed: int = 0,
     return batch, chat
 
 
+def agent_pipeline(n_workflows: int, stages: int = 4, seed: int = 0,
+                   vocab: int = 32000, context_tokens: int = 1536,
+                   stage_tokens: int = 192, output_mean: float = 48.0,
+                   stagger: float = 0.5, stage_gap: float = 2.0) -> Workload:
+    """Multi-agent workflow shape (AgentBench/BurstGPT agentic cohort):
+    each workflow is a pipeline of `stages` sequential agent calls over ONE
+    growing transcript — stage s's prompt is the shared workflow context
+    plus every earlier stage's segment, so it is a strict token-level
+    prefix of stage s+1's prompt.  Served with affinity (all stages on the
+    instance holding the transcript's KV) each stage's prefill is nearly
+    free; scattered across the fleet every stage recomputes the whole
+    transcript.  Requests carry ``workflow_id`` (and ``session_id``) for
+    the gateway's workflow-aware routing; stage arrivals are separated by
+    ``stage_gap`` (agents think/act between calls) and workflow starts by
+    ``stagger``."""
+    rng = np.random.default_rng(seed)
+    w = Workload()
+    for wf in range(n_workflows):
+        t0 = wf * stagger
+        transcript = rng.integers(1, vocab, size=context_tokens).tolist()
+        for s in range(stages):
+            out_len = max(1, int(rng.gamma(2.0, output_mean / 2.0)))
+            w.requests.append(Request(
+                prompt_tokens=list(transcript),
+                sampling=SamplingParams(target_output_len=out_len,
+                                        max_new_tokens=out_len, seed=seed),
+                session_id=f"wf-{wf}",
+                workflow_id=f"wf-{wf}"))
+            w.arrivals.append(t0 + s * stage_gap)
+            # the next agent's prompt extends the transcript with this
+            # stage's tool output / assistant turn
+            transcript += rng.integers(1, vocab, size=stage_tokens).tolist()
+    return w
+
+
 def bursty_poisson(rate: float, duration: float, seed: int = 0,
                    vocab: int = 32000, cv: float = 2.0) -> Workload:
     """Open-loop bursty arrivals (Gamma renewal process, CV>1 = bursts).

@@ -13,8 +13,8 @@ from typing import Optional
 
 import numpy as np
 
-from repro.engine.kv_cache import BlockAllocator, export_handoff, \
-    import_handoff
+from repro.engine.kv_cache import BlockAllocator, HandoffBlockSizeMismatch, \
+    export_handoff, import_handoff
 from repro.engine.metrics import EngineMetrics, snapshot
 from repro.engine.request import Request, RequestStatus
 from repro.engine.scheduler import PHASE_MODES, Scheduler
@@ -64,9 +64,15 @@ class LLMEngine:
             # decode hop: re-materialise the prefill pool's sealed blocks
             # so admission's match_prefix reattaches them instead of
             # recomputing the whole prompt
-            n = import_handoff(self.allocator, req.handoff)
-            self.metrics.handoffs_imported += 1
-            self.metrics.handoff_blocks_imported += n
+            try:
+                n = import_handoff(self.allocator, req.handoff)
+            except HandoffBlockSizeMismatch:
+                # heterogeneous pools: the handoff's hashes are useless
+                # here — degrade to a full recompute, but observably
+                self.metrics.handoff_import_errors += 1
+            else:
+                self.metrics.handoffs_imported += 1
+                self.metrics.handoff_blocks_imported += n
         self.scheduler.add_request(req, now)
 
     def has_work(self) -> bool:

@@ -49,6 +49,11 @@ class BlockAllocator:
         # pinning by hash blindly.
         self.prefix_queries = 0
         self.prefix_hits = 0
+        # optional lower tiers (repro.core.kvstore.TieredKVStore): when
+        # set, recycling an evictable block DEMOTES its chain hash down a
+        # tier instead of discarding it, and lookup misses consult the
+        # tiers and PROMOTE on hit.  None keeps discard-eviction.
+        self.tier_store = None
 
     # -- invariant helpers (exercised by hypothesis tests) ---------------
     def num_free(self) -> int:
@@ -62,15 +67,25 @@ class BlockAllocator:
             assert self.blocks[i].ref_count == 0
 
     # -- allocation -------------------------------------------------------
+    def _recycle_evictable(self) -> int:
+        """Pop one warm (ref-0, sealed) block from the evictable pool and
+        strip its identity.  With tiers attached the evicted chain hash is
+        DEMOTED down the hierarchy instead of forgotten — the block's
+        content stays promotable."""
+        idx, _ = self._evictable.popitem()
+        old = self.blocks[idx]
+        if old.token_hash is not None:
+            if self.tier_store is not None:
+                self.tier_store.demote(old.token_hash)
+            self.prefix_index.pop(old.token_hash, None)
+            old.token_hash = None
+        return idx
+
     def allocate(self) -> int:
         if self.free_list:
             idx = self.free_list.pop()
         elif self._evictable:
-            idx, _ = self._evictable.popitem()
-            old = self.blocks[idx]
-            if old.token_hash is not None:
-                self.prefix_index.pop(old.token_hash, None)
-                old.token_hash = None
+            idx = self._recycle_evictable()
         else:
             raise OutOfBlocks()
         b = self.blocks[idx]
@@ -108,12 +123,37 @@ class BlockAllocator:
             return None
         self.prefix_queries += 1
         idx = self.prefix_index.get(token_hash)
+        if idx is not None and self.blocks[idx].token_hash == token_hash:
+            self.prefix_hits += 1
+            return idx
+        # HBM miss: consult the lower tiers before giving up (re-prefill)
+        idx = self._promote(token_hash)
         if idx is None:
             return None
-        b = self.blocks[idx]
-        if b.token_hash != token_hash:
-            return None
         self.prefix_hits += 1
+        return idx
+
+    def _promote(self, token_hash: int) -> Optional[int]:
+        """Re-materialise a demoted block from the host/shared tiers.
+        Prefers truly free HBM blocks; with none left it SWAPS — recycling
+        one warm evictable block (whose hash is demoted, so nothing is
+        lost) for the block being requested right now.  A block some
+        sequence still references is never touched, and with the pools
+        empty on both sides the promotion is refused (the prefix is
+        simply re-prefilled)."""
+        if self.tier_store is None \
+                or not (self.free_list or self._evictable):
+            return None
+        if not self.tier_store.lookup(token_hash):
+            return None
+        idx = self.free_list.pop() if self.free_list \
+            else self._recycle_evictable()
+        b = self.blocks[idx]
+        assert b.ref_count == 0
+        b.token_hash = token_hash
+        self.prefix_index[token_hash] = idx
+        self._evictable[idx] = None   # ref 0: the caller forks to resurrect
+        self.tier_store.promotions += 1
         return idx
 
     @property
@@ -192,21 +232,47 @@ def export_handoff(tokens: list, block_size: int, first_token: int,
                      kv_bytes=float(covered) * kv_bytes_per_token)
 
 
+class HandoffBlockSizeMismatch(ValueError):
+    """A `KVHandoff` whose chain hashes were computed under a different
+    ``block_size`` than the importing allocator's.  Sealing such hashes
+    would content-address chunks no real `match_prefix` walk can ever
+    produce (a silent mis-seal polluting the prefix index), so the import
+    is rejected loudly and the caller decides whether to degrade to a
+    full recompute (`LLMEngine.add_request` does, and counts it)."""
+
+    def __init__(self, expected: int, got: int):
+        super().__init__(f"handoff block_size {got} does not match "
+                         f"allocator block_size {expected}")
+        self.expected = expected
+        self.got = got
+
+
+def _resident(alloc: BlockAllocator, token_hash: int) -> bool:
+    """Counter-free residency probe: like `lookup` but without touching
+    the prefix-hit counters (import dedup probes are not client queries —
+    counting them would inflate the hit rate slo_cost routing scrapes)."""
+    idx = alloc.prefix_index.get(token_hash)
+    return idx is not None and alloc.blocks[idx].token_hash == token_hash
+
+
 def import_handoff(alloc: BlockAllocator, handoff: KVHandoff) -> int:
     """Materialise a handoff into `alloc`'s content-addressed index so the
     next `match_prefix` of the prompt hits.  Blocks already present (an
-    earlier request with the same prefix) are deduplicated.  Imports only
-    consume truly free blocks — never the warm evictable pool (evicting
-    resident prefix cache for an incoming transfer would trade a certain
-    hit for a speculative one), and running out stops the import early:
-    the uncovered suffix is simply recomputed.  Returns the number of
-    blocks newly imported."""
-    if not alloc.enable_prefix_caching \
-            or handoff.block_size != alloc.block_size:
+    earlier request with the same, possibly partial, prefix) are
+    deduplicated against the resident index without counter side effects.
+    Imports only consume truly free blocks — never the warm evictable
+    pool (evicting resident prefix cache for an incoming transfer would
+    trade a certain hit for a speculative one), and running out stops the
+    import early: the uncovered suffix is simply recomputed.  Returns the
+    number of blocks newly imported.  Raises `HandoffBlockSizeMismatch`
+    when the handoff was exported under a different block size."""
+    if handoff.block_size != alloc.block_size:
+        raise HandoffBlockSizeMismatch(alloc.block_size, handoff.block_size)
+    if not alloc.enable_prefix_caching:
         return 0
     imported = 0
     for h in handoff.block_hashes:
-        if alloc.lookup(h) is not None:
+        if _resident(alloc, h):
             continue                    # transfer dedup: receiver has it
         if not alloc.free_list:
             break

@@ -137,6 +137,11 @@ class Request:
     # multi-turn chat / tenant key used by session-affinity routing; None
     # for one-shot requests (router falls back to round-robin)
     session_id: Optional[str] = None
+    # multi-agent workflow key (one agent pipeline sharing a growing
+    # context): workflow-affinity routing pins every stage of a workflow
+    # to the same instance so the shared-prefix KV is reused across
+    # agents; None when the request is not part of a workflow
+    workflow_id: Optional[str] = None
     # wire-level scheduling hint; orders requests WITHIN a tenant in the
     # gateway queue (across tenants, weighted fair queuing rules — see
     # repro.core.tenancy)

@@ -62,6 +62,9 @@ class Scheduler:
         self.waiting: deque[Request] = deque()
         self.running: list[RunningSeq] = []
         self.free_slots = list(range(max_num_seqs - 1, -1, -1))
+        # head-of-queue admissions refused for lack of free KV blocks —
+        # the HBM-pressure signal the kvstore tiers are meant to relieve
+        self.admission_blocked = 0
 
     # ------------------------------------------------------------------
     def add_request(self, req: Request, now: float):
@@ -101,10 +104,14 @@ class Scheduler:
             req.status = RequestStatus.FAILED
             return self._try_admit(now)
         kv = SequenceKV(self.alloc)
+        # match_prefix consults the tier hierarchy transparently: demoted
+        # blocks are promoted back into HBM (free blocks permitting)
+        # before the chunk below is charged against the free pool
         covered = kv.match_prefix(req.prompt_tokens)
         first_chunk = min(self.max_prefill_tokens, req.prompt_len - covered)
         if kv.blocks_needed(first_chunk) > self.alloc.num_free():
             kv.release()
+            self.admission_blocked += 1
             return None  # head-of-queue blocks: strict FCFS
         self.waiting.popleft()
         seq = RunningSeq(req, kv, self.free_slots.pop(), prefill_pos=covered,

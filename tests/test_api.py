@@ -190,6 +190,7 @@ def test_sampling_params_reject_bad_fields(field, value):
     (dict(stream=1), "stream"),
     (dict(priority="high"), "priority"),
     (dict(session_id=42), "session_id"),
+    (dict(workflow_id=42), "workflow_id"),
     (dict(temperature=-1.0), "temperature"),
     (dict(top_k=0.5), "top_k"),
     (dict(target_output_len=0), "target_output_len"),

@@ -19,7 +19,8 @@ from repro.core.disagg import (DisaggProfile, DisaggregatedRouter,
 from repro.data.burstgpt import mixed_burst
 from repro.engine.engine import LLMEngine
 from repro.engine.executor import SimExecutor
-from repro.engine.kv_cache import BlockAllocator, SequenceKV
+from repro.engine.kv_cache import (BlockAllocator, HandoffBlockSizeMismatch,
+                                   SequenceKV)
 from repro.engine.request import Request, RequestStatus, SamplingParams
 from repro.config import GPU_H100
 
@@ -81,11 +82,16 @@ def test_import_handoff_degrades_gracefully():
     # exhausted allocator: partial import, prefix still usable
     tiny = BlockAllocator(2, 16)
     assert import_handoff(tiny, h) == 2
-    # prefix caching off / mismatched block size: nothing imported
+    # prefix caching off: nothing imported (the decode hop recomputes)
     off = BlockAllocator(64, 16, enable_prefix_caching=False)
     assert import_handoff(off, h) == 0
+    # mismatched block size: the chain hashes are incompatible — silently
+    # importing zero used to hide deployment misconfigurations, so this is
+    # now a typed error the engine converts to metered recompute
     other = BlockAllocator(64, 32)
-    assert import_handoff(other, h) == 0
+    with pytest.raises(HandoffBlockSizeMismatch) as ei:
+        import_handoff(other, h)
+    assert ei.value.expected == 32 and ei.value.got == 16
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,561 @@
+"""Hierarchical KV store subsystem (repro.core.kvstore, docs/kv_store.md):
+tier caches and the tiered store facade, allocator demotion/promotion
+invariants (a live-referenced block is never lost; a promoted prefix is
+bit-for-bit re-matchable), shared-store chain-hash keying, the typed
+`import_handoff` block-size error + resident-block dedup, the FIFO
+shared-NIC `LinkContentionModel` behind chunked handoff streaming,
+workflow-aware affinity routing (wire field -> ring pinning -> fallback
+chain), the `KVStoreSpec`/observability spec plumbing through deployments
+and the Metrics Gateway, tenancy token refunds + adaptive retry_after,
+and twin-run determinism of the tiered serving scenario.
+
+CI runs this file in the isolated-first slot (see .github/workflows)."""
+import pytest
+
+from repro import configs
+from repro.api import (AdminClient, APIStatusError, ChatCompletionRequest,
+                       ChatMessage, CompletionRequest, ServingClient)
+from repro.api.errors import APIError
+from repro.config import ServiceConfig
+from repro.core.autoscaler import AlertRule, rule_from_dict
+from repro.core.controller import ClusterSpec, ControlPlane
+from repro.core.deployments import ModelDeploymentSpec
+from repro.core.kvstore import (KVStoreSpec, LinkContentionModel, TierCache,
+                                TieredKVStore, chunk_plan, make_tier_store)
+from repro.core.router import WorkflowAffinity
+from repro.core.tenancy import TenancyManager, TenantSpec
+from repro.engine.kv_cache import (BlockAllocator, HandoffBlockSizeMismatch,
+                                   SequenceKV, chain_hash, export_handoff,
+                                   import_handoff)
+from repro.engine.request import Request, RequestStatus, SamplingParams
+
+MODEL = "smollm-135m"
+
+
+# ---------------------------------------------------------------------------
+# TierCache / TieredKVStore units
+# ---------------------------------------------------------------------------
+
+def test_tier_cache_lru_eviction_and_counters():
+    tc = TierCache(2, name="host")
+    assert tc.put(1) and tc.put(2)
+    assert 1 in tc and 2 in tc and len(tc) == 2
+    tc.get(1)                      # refresh: 2 becomes LRU
+    tc.put(3)                      # evicts 2
+    assert 2 not in tc and 1 in tc and 3 in tc
+    assert tc.evictions == 1 and tc.insertions == 3
+    assert tc.hits == 1
+    assert not tc.get(2) and tc.misses == 1
+    # re-putting a resident key refreshes without counting an insertion
+    tc.put(1)
+    assert tc.insertions == 3 and len(tc) == 2
+    # a zero-capacity tier stores nothing
+    off = TierCache(0)
+    assert not off.put(9) and 9 not in off
+
+
+def test_tiered_store_write_through_and_promotion_path():
+    shared = TierCache(8, name="shared")
+    ts = TieredKVStore(TierCache(8, name="host"), shared=shared)
+    ts.demote(11)
+    # write-through: the demotion lands in BOTH lower tiers
+    assert 11 in ts.host and 11 in shared
+    assert ts.demotions == 1
+    assert ts.lookup(11) and ts.host_hits == 1
+    # a hash only the shared store holds (demoted by a sibling engine) is
+    # pulled up into the host tier on the way back — inclusive hierarchy
+    shared.put(22)
+    assert ts.lookup(22)
+    assert ts.shared_hits == 1 and 22 in ts.host
+    assert not ts.lookup(33)
+
+
+def test_shared_store_keys_collide_only_on_identical_chains():
+    # chain hashes are content addresses over the FULL token prefix: two
+    # workflows sharing a context produce the same key for the shared
+    # part and distinct keys from the first divergent block on
+    bs = 4
+    common = tuple(range(1, 1 + bs))
+    h0 = chain_hash(0, common)
+    assert h0 == chain_hash(0, common)
+    a = chain_hash(h0, (9, 9, 9, 9))
+    b = chain_hash(h0, (8, 8, 8, 8))
+    assert a != b
+    # same chunk under a different predecessor chain is a different key
+    assert chain_hash(a, common) != chain_hash(b, common)
+    shared = TierCache(16, name="shared")
+    shared.put(a), shared.put(b)
+    assert len(shared) == 2
+    shared.put(chain_hash(h0, (9, 9, 9, 9)))     # identical chain: no dup
+    assert len(shared) == 2
+
+
+def test_make_tier_store_disabled_forms():
+    assert make_tier_store(None) is None
+    assert make_tier_store(KVStoreSpec(host_blocks=0, shared_blocks=0)) \
+        is None
+    # shared-only: a deployment can pool everything in the shared store
+    shared = TierCache(4, name="shared")
+    ts = make_tier_store(KVStoreSpec(host_blocks=0), shared=shared)
+    assert ts is not None and ts.shared is shared
+
+
+def test_kvstore_spec_validate_and_roundtrip():
+    spec = KVStoreSpec(host_blocks=128, shared_blocks=1024)
+    spec.validate()
+    assert KVStoreSpec.from_dict(spec.to_dict()) == spec
+    with pytest.raises(APIStatusError) as ei:
+        KVStoreSpec(host_blocks=-1).validate()
+    assert ei.value.error.param == "kv_store.host_blocks"
+    with pytest.raises(APIStatusError) as ei:
+        KVStoreSpec.from_dict({"host_blocks": 1, "hbm_blocks": 2})
+    assert "hbm_blocks" in ei.value.error.param
+
+
+# ---------------------------------------------------------------------------
+# allocator tiering invariants
+# ---------------------------------------------------------------------------
+
+def _filled_allocator(num_blocks=8, bs=4, tiers=True):
+    alloc = BlockAllocator(num_blocks, bs)
+    if tiers:
+        alloc.tier_store = TieredKVStore(
+            TierCache(64, name="host"), shared=TierCache(64, name="shared"))
+    return alloc
+
+
+def test_demotion_never_loses_live_referenced_block():
+    alloc = _filled_allocator()
+    # one LIVE sealed block and three warm (evictable) sealed blocks
+    live = alloc.allocate()
+    alloc.seal(live, 101)
+    warm = []
+    for h in (102, 103, 104):
+        i = alloc.allocate()
+        alloc.seal(i, h)
+        alloc.free(i)               # ref 0 + sealed -> evictable pool
+        warm.append(i)
+    # burn every remaining block so allocation must recycle the warm pool
+    for _ in range(alloc.num_blocks - 4 + len(warm)):
+        alloc.allocate()
+    alloc.check_invariants()
+    # the warm blocks were demoted — never the live one
+    ts = alloc.tier_store
+    assert ts.demotions == 3
+    assert all(h in ts.host and h in ts.shared for h in (102, 103, 104))
+    assert 101 not in ts.host
+    assert alloc.blocks[live].token_hash == 101
+    assert alloc.prefix_index[101] == live
+    with pytest.raises(Exception):
+        alloc.allocate()            # and a held block is never recycled
+
+
+def test_promotion_restores_match_prefix_bit_for_bit():
+    bs = 4
+    alloc = _filled_allocator(num_blocks=8, bs=bs)
+    tokens = list(range(1, 2 * bs + 2))       # 2 complete blocks + 1 token
+    seq = SequenceKV(alloc)
+    assert seq.match_prefix(tokens) == 0
+    seq.append_tokens(len(tokens), token_ids=tokens)
+    seq.release()                             # sealed blocks stay warm
+    # evict everything: churn allocations until the warm pool is recycled
+    held = [alloc.allocate() for _ in range(alloc.num_blocks)]
+    assert alloc.tier_store.demotions >= 2
+    for i in held:
+        alloc.free(i)
+    baseline_hits = alloc.prefix_hits
+    # the prompt's blocks are HBM-gone but tier-resident: match_prefix
+    # promotes them back and covers exactly the complete-block prefix,
+    # token-for-token the same coverage a pure-HBM hit would give
+    seq2 = SequenceKV(alloc)
+    assert seq2.match_prefix(tokens) == 2 * bs
+    assert alloc.tier_store.promotions == 2
+    assert alloc.prefix_hits == baseline_hits + 2
+    alloc.check_invariants()
+    # and the promoted blocks are genuinely live again
+    assert all(alloc.blocks[i].ref_count == 1 for i in seq2.block_table)
+
+
+def test_promotion_without_tiers_or_free_blocks_is_a_miss():
+    bs = 4
+    alloc = BlockAllocator(4, bs)             # no tier store
+    seq = SequenceKV(alloc)
+    tokens = list(range(1, bs + 2))
+    seq.append_tokens(len(tokens), token_ids=tokens)
+    seq.release()
+    held = [alloc.allocate() for _ in range(alloc.num_blocks)]
+    assert SequenceKV(alloc).match_prefix(tokens) == 0    # discarded
+    for i in held:
+        alloc.free(i)
+    # tiers present but zero free blocks: promotion refuses to evict the
+    # warm pool for a speculative hit
+    alloc2 = _filled_allocator(num_blocks=2, bs=bs)
+    s = SequenceKV(alloc2)
+    s.append_tokens(len(tokens), token_ids=tokens)
+    s.release()
+    burn = [alloc2.allocate() for _ in range(2)]
+    assert alloc2.tier_store.demotions >= 1
+    assert SequenceKV(alloc2).match_prefix(tokens) == 0
+    assert alloc2.tier_store.promotions == 0
+    for i in burn:
+        alloc2.free(i)
+    alloc2.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# import_handoff edge cases (satellite: typed error + dedup)
+# ---------------------------------------------------------------------------
+
+def test_import_handoff_block_size_mismatch_is_typed():
+    h = export_handoff(list(range(1, 65)), block_size=16, first_token=1)
+    alloc = BlockAllocator(16, 32)
+    with pytest.raises(HandoffBlockSizeMismatch) as ei:
+        import_handoff(alloc, h)
+    assert ei.value.expected == 32 and ei.value.got == 16
+    assert isinstance(ei.value, ValueError)
+    # nothing was sealed by the failed import
+    assert not alloc.prefix_index
+    # caching off still reports a plain zero (no hashes to seal at all)
+    off = BlockAllocator(16, 16, enable_prefix_caching=False)
+    assert import_handoff(off, h) == 0
+
+
+def test_import_handoff_dedups_resident_partial_prefix():
+    toks = list(range(1, 129))
+    short = export_handoff(toks[:64], block_size=16, first_token=1)
+    full = export_handoff(toks, block_size=16, first_token=1)
+    alloc = BlockAllocator(64, 16)
+    assert import_handoff(alloc, short) == 3     # (64-1)//16 complete blocks
+    q0, h0 = alloc.prefix_queries, alloc.prefix_hits
+    # the longer handoff shares its first 3 chain hashes with the resident
+    # prefix: only the new suffix blocks are imported, and the dedup walk
+    # leaves the routing-visible hit-rate counters untouched
+    assert import_handoff(alloc, full) == 4
+    assert (alloc.prefix_queries, alloc.prefix_hits) == (q0, h0)
+    assert import_handoff(alloc, full) == 0          # fully resident
+    alloc.check_invariants()
+    seq = SequenceKV(alloc)
+    assert seq.match_prefix(toks + [999]) == 112     # all 7 resident blocks
+
+
+# ---------------------------------------------------------------------------
+# LinkContentionModel / chunk_plan
+# ---------------------------------------------------------------------------
+
+def test_link_contention_fifo_reservation():
+    link = LinkContentionModel(100.0)          # 100 B/s
+    # two "simultaneous" transfers serialise: 50B then 30B
+    assert link.transmit(50, 10.0) == pytest.approx(10.5)
+    assert link.transmit(30, 10.0) == pytest.approx(10.8)
+    assert link.queue_delay_total == pytest.approx(0.5)
+    assert link.transfers == 2 and link.bytes_sent == 80.0
+    # after the link drains, a new transfer starts immediately
+    assert link.transmit(10, 20.0) == pytest.approx(20.1)
+    # zero-byte and zero-bandwidth transfers complete instantly
+    assert link.transmit(0, 30.0) == 30.0
+    assert LinkContentionModel(0.0).transmit(100, 5.0) == 5.0
+    st = link.stats()
+    assert st["transfers"] == 3 and st["bandwidth"] == 100.0
+
+
+def test_chunk_plan_shapes():
+    assert chunk_plan(80.0, 8) == [10.0] * 8
+    assert sum(chunk_plan(100.0, 3)) == pytest.approx(100.0)
+    assert chunk_plan(0.0, 4) == [0.0] * 4
+    assert chunk_plan(64.0, 0) == [64.0]       # always >= 1 chunk
+    assert chunk_plan(64.0, 1) == [64.0]       # the atomic baseline
+
+
+# ---------------------------------------------------------------------------
+# workflow-aware affinity routing
+# ---------------------------------------------------------------------------
+
+def _eps(n=4):
+    return [{"id": i, "node": f"node{i:03d}", "port": 8000 + i,
+             "phase": None} for i in range(n)]
+
+
+def _req(workflow=None, session=None, tenant=None):
+    r = Request(prompt_tokens=[1, 2, 3],
+                sampling=SamplingParams(target_output_len=2,
+                                        max_new_tokens=2),
+                session_id=session, workflow_id=workflow)
+    r.tenant = tenant
+    return r
+
+
+def test_workflow_affinity_pins_stages_to_one_instance():
+    pol = WorkflowAffinity()
+    eps = _eps()
+    picks = {pol.select(eps, _req(workflow="wf-7"))["port"]
+             for _ in range(10)}
+    assert len(picks) == 1                     # every stage, same instance
+    assert pol.affinity_hits == 10
+    # survives endpoint churn for most keys (consistent hashing): the
+    # pinned endpoint only moves if ITS vnode range changed
+    spread = {w: pol.select(eps, _req(workflow=f"wf-{w}"))["port"]
+              for w in range(32)}
+    moved = sum(1 for w, p in spread.items()
+                if pol.select(eps[:-1], _req(workflow=f"wf-{w}"))
+                .get("port") != p and p != eps[-1]["port"])
+    assert moved == 0                          # only the dead node's keys
+
+
+def test_workflow_affinity_fallback_chain_and_tenant_namespacing():
+    pol = WorkflowAffinity()
+    eps = _eps()
+    # no workflow_id -> session affinity pins by session
+    s = {pol.select(eps, _req(session="chat-1"))["port"] for _ in range(5)}
+    assert len(s) == 1 and pol.fallbacks == 5
+    assert pol.stats()["session_fallback"]["affinity_hits"] == 5
+    # neither key -> round-robin sweeps the fleet
+    anon = [pol.select(eps, _req())["port"] for _ in range(4)]
+    assert sorted(anon) == sorted(e["port"] for e in eps)
+    # tenant namespacing: the same workflow id from two tenants is two
+    # independent ring keys (they *may* collide on an endpoint, but the
+    # ring keys must hash independently — check against a bigger ring)
+    many = _eps(8)
+    picks = {t: pol.select(many, _req(workflow="wf-1", tenant=t))["port"]
+             for t in ("uni-a", "uni-b", "uni-c", "uni-d", "uni-e")}
+    assert len(set(picks.values())) > 1
+
+
+def test_workflow_id_wire_roundtrip():
+    c = CompletionRequest(model=MODEL, prompt=[1, 2, 3], max_tokens=4,
+                          workflow_id="wf-1", session_id="s-1")
+    c.validate()
+    assert CompletionRequest.from_dict(c.to_dict()).workflow_id == "wf-1"
+    assert c.to_engine_request().workflow_id == "wf-1"
+    assert CompletionRequest.from_engine(
+        c.to_engine_request(), MODEL).workflow_id == "wf-1"
+    m = ChatCompletionRequest(model=MODEL,
+                              messages=[ChatMessage("user", [1, 2])],
+                              workflow_id="wf-2")
+    m.validate()
+    assert ChatCompletionRequest.from_dict(m.to_dict()).workflow_id == "wf-2"
+    assert m.to_engine_request().workflow_id == "wf-2"
+
+
+# ---------------------------------------------------------------------------
+# spec plumbing: deployments, metrics gateway, autoscaler overrides
+# ---------------------------------------------------------------------------
+
+RULE = {"name": "hot_kv", "metric": "kv_util_avg", "op": "gt",
+        "threshold": 0.9, "for_duration": 20.0, "delta": 1,
+        "cooldown": 30.0, "pool": None}
+
+
+def test_deployment_spec_kv_and_observability_roundtrip():
+    spec = ModelDeploymentSpec(
+        model=MODEL, kv_store=KVStoreSpec(host_blocks=64, shared_blocks=256),
+        prometheus_labels={"team": "chat-ai", "cluster": "hpc1"},
+        alert_rules=[dict(RULE)])
+    spec.validate()
+    again = ModelDeploymentSpec.from_dict(spec.to_dict())
+    assert again.kv_store == spec.kv_store
+    assert again.prometheus_labels == spec.prometheus_labels
+    assert again.alert_rules == spec.alert_rules
+
+
+@pytest.mark.parametrize("patch,param", [
+    (dict(kv_store="big"), "kv_store"),
+    (dict(prometheus_labels={"team": 3}), "prometheus_labels.team"),
+    (dict(prometheus_labels={"": "x"}), "prometheus_labels."),
+    (dict(alert_rules=[{**RULE, "op": "ge"}]), "alert_rules[0].op"),
+    (dict(alert_rules=[{**RULE, "bogus": 1}]), "alert_rules[0].bogus"),
+    (dict(alert_rules=[{k: v for k, v in RULE.items() if k != "metric"}]),
+     "alert_rules[0].metric"),
+    (dict(alert_rules=[{**RULE, "pool": "middle"}]), "alert_rules[0].pool"),
+    (dict(alert_rules=[{**RULE, "threshold": "hot"}]),
+     "alert_rules[0].threshold"),
+])
+def test_deployment_spec_kv_validation_is_field_addressed(patch, param):
+    spec = ModelDeploymentSpec(model=MODEL, **patch)
+    with pytest.raises(APIStatusError) as ei:
+        spec.validate()
+    assert ei.value.error.param == param
+
+
+def test_rule_from_dict_builds_equivalent_rule():
+    rule = rule_from_dict(RULE)
+    assert isinstance(rule, AlertRule)
+    assert rule.name == "hot_kv" and rule.metric == "kv_util_avg"
+    assert rule.breached(0.95) and not rule.breached(0.5)
+    defaults = rule_from_dict({k: v for k, v in RULE.items()
+                               if k not in ("cooldown", "pool")})
+    assert defaults.cooldown == 60.0 and defaults.pool is None
+
+
+def _tiered_plane(**kw):
+    spec = ClusterSpec(num_nodes=4, gpus_per_node=1, max_num_seqs=8,
+                       num_blocks=kw.pop("num_blocks", 64), block_size=16,
+                       max_model_len=1024, services=ServiceConfig(
+                           routing_policy="workflow_affinity"))
+    cp = ControlPlane(spec, alert_rules=[])
+    cp.add_tenant("uni", "sk-test")
+    cp.register_model(configs.get(MODEL))
+    AdminClient(cp).apply(ModelDeploymentSpec(
+        model=MODEL, replicas=kw.pop("replicas", 2), max_replicas=4,
+        routing_policy="workflow_affinity", est_load_time=10.0,
+        kv_store=KVStoreSpec(host_blocks=256, shared_blocks=1024),
+        prometheus_labels={"team": "chat-ai"},
+        alert_rules=[dict(RULE)], **kw))
+    cp.run_until(120.0)
+    assert len(cp.ready_endpoints(MODEL)) >= 2
+    return cp
+
+
+def test_control_plane_wires_tiers_labels_and_rule_overrides():
+    cp = _tiered_plane()
+    insts = [i for i in cp.instances_spawned if i.alive]
+    stores = [i.engine.allocator.tier_store for i in insts]
+    assert all(ts is not None for ts in stores)
+    # every replica has a PRIVATE host tier but the SAME shared store
+    assert len({id(ts.host) for ts in stores}) == len(stores)
+    assert len({id(ts.shared) for ts in stores}) == 1
+    assert cp.shared_kv[MODEL] is stores[0].shared
+    # prometheus targets carry the deployment's extra labels; core labels
+    # are not overridable
+    targets = cp.metrics_gateway.prometheus_targets()
+    assert targets and all(t["labels"]["team"] == "chat-ai"
+                           for t in targets)
+    assert all(t["labels"]["model"] == MODEL for t in targets)
+    # the autoscaler resolves the deployment's override rule set
+    cfg_id = cp.db["ai_model_configurations"].select(
+        model_name=MODEL)[0]["id"]
+    override = cp.autoscaler.rules_for(cfg_id)
+    assert [r.name for r in override] == ["hot_kv"]
+    assert cp.autoscaler.rules_for(cfg_id + 999) is None
+    # per-tier series land in the scrape aggregates
+    cp.run_until(cp.loop.now + 30.0)
+    assert cp.metrics_gateway.series(cfg_id, "kv_demotions_total", 0.0)
+    assert cp.metrics_gateway.series(cfg_id, "kv_promotions_total", 0.0)
+
+
+def test_tiered_serving_end_to_end_promotes_across_requests():
+    cp = _tiered_plane(num_blocks=32, replicas=2)
+    client = ServingClient(cp, api_key="sk-test")
+    prompt = list(range(1, 200))
+    for i in range(6):
+        # same workflow -> same instance; interleaved filler churns the
+        # tiny HBM pool so the transcript's blocks get demoted + promoted
+        client.completions(model=MODEL, prompt=prompt, max_tokens=2,
+                           target_output_len=2,
+                           workflow_id="wf-0").result(max_wait=600.0)
+        client.completions(model=MODEL,
+                           prompt=[7000 + 17 * i + j for j in range(150)],
+                           max_tokens=2, target_output_len=2,
+                           workflow_id=f"filler-{i}").result(max_wait=600.0)
+    stores = [i.engine.allocator.tier_store
+              for i in cp.instances_spawned if i.alive]
+    assert sum(ts.demotions for ts in stores) > 0
+    assert sum(ts.promotions for ts in stores) > 0
+    snaps = [i.metrics_snapshot()
+             for i in cp.instances_spawned if i.alive]
+    assert sum(s["kv_demotions_total"] for s in snaps) > 0
+    assert sum(s["kv_promotions_total"] for s in snaps) > 0
+
+
+# ---------------------------------------------------------------------------
+# tenancy satellites: early-stop refunds + adaptive retry_after
+# ---------------------------------------------------------------------------
+
+def _tenancy(spec):
+    cp = ControlPlane(ClusterSpec(num_nodes=1))
+    cp.add_tenant("uni", "sk-test", spec=spec)
+    return cp.tenancy
+
+
+def _done_req(target=100, completion=10, prompt=16):
+    r = Request(prompt_tokens=[1] * prompt,
+                sampling=SamplingParams(target_output_len=target,
+                                        max_new_tokens=target))
+    r.status = RequestStatus.FINISHED
+    r.metrics.finish_time = 1.0
+    r.metrics.prompt_tokens = prompt
+    r.metrics.completion_tokens = completion
+    return r
+
+
+def test_early_stop_refunds_token_bucket():
+    tm = _tenancy(TenantSpec(name="uni", tokens_per_min=6000.0))
+    tb = tm._tok_buckets["uni"]
+    r = _done_req(target=100, completion=10, prompt=16)
+    assert tm.admit("uni", r, now=0.0) is None
+    assert tb.level == pytest.approx(6000.0 - 116)
+    tm.on_request_done("uni", r, now=1.0)
+    # admission charged prompt+target (116); the engine recorded 16+10 —
+    # the 90-token surplus flows back (refill for the elapsed second is
+    # capped by the bucket's level accounting, checked loosely here)
+    assert tb.level >= 6000.0 - 26
+    # the refund never overfills the bucket
+    assert tb.level <= tb.capacity
+    # usage metering still bills the REAL tokens
+    assert tm.totals["uni"]["completion_tokens"] == 10
+
+
+def test_full_length_completion_refunds_nothing():
+    tm = _tenancy(TenantSpec(name="uni", tokens_per_min=6000.0))
+    tb = tm._tok_buckets["uni"]
+    r = _done_req(target=100, completion=100, prompt=16)
+    assert tm.admit("uni", r, now=0.0) is None
+    level_after_admit = tb.level
+    tm.on_request_done("uni", r, now=0.0)      # same instant: no refill
+    assert tb.level == pytest.approx(level_after_admit)
+
+
+def test_max_inflight_retry_after_tracks_completion_rate():
+    tm = _tenancy(TenantSpec(name="uni", max_inflight=1))
+    r1 = _done_req()
+    assert tm.admit("uni", r1, now=0.0) is None
+    err = tm.admit("uni", _done_req(), now=0.0)
+    assert isinstance(err, APIError) and err.http_status == 429
+    assert err.retry_after == 1.0              # no completions observed yet
+    # observe a steady ~2 s completion cadence
+    tm.on_request_done("uni", r1, now=0.0)
+    for t in (2.0, 4.0, 6.0, 8.0):
+        r = _done_req()
+        assert tm.admit("uni", r, now=t) is None
+        tm.on_request_done("uni", r, now=t)
+    blocked = _done_req()
+    assert tm.admit("uni", blocked, now=8.0) is None
+    err = tm.admit("uni", _done_req(), now=8.0)
+    assert err is not None and err.retry_after == pytest.approx(2.0)
+    # the hint is clamped to a sane window
+    tm._done_gap["uni"] = 1e6
+    err = tm.admit("uni", _done_req(), now=8.0)
+    assert err.retry_after == 60.0
+    tm._done_gap["uni"] = 1e-6
+    err = tm.admit("uni", _done_req(), now=8.0)
+    assert err.retry_after == 0.05
+
+
+# ---------------------------------------------------------------------------
+# chunked handoff streaming + twin-run determinism (integration)
+# ---------------------------------------------------------------------------
+
+def test_chunked_streaming_charges_through_the_shared_link():
+    from benchmarks.disagg import run_scenario
+    from benchmarks.table1 import MODEL as BENCH_MODEL
+    row = run_scenario("disaggregated", 4, total=2, prefill=1)
+    assert row["handoffs"] >= 4
+    assert row["transfer_mean_ms"] > 0
+    links = row["router"]["kv_links"]
+    assert BENCH_MODEL in links
+    st = links[BENCH_MODEL]
+    # every handoff moved its payload through the contention model in
+    # stream_chunks pieces (the deployment default is 8)
+    assert st["transfers"] == row["handoffs"] * 8
+    assert st["bytes_sent"] > 0 and st["queue_delay_total"] >= 0.0
+
+
+def test_kvstore_twin_runs_bit_identical():
+    from benchmarks.kvstore import run_tiering
+    a = run_tiering(4, True, sanitize=True)
+    b = run_tiering(4, True, sanitize=True)
+    assert a["trace_digest"] == b["trace_digest"], \
+        "same tiered scenario, different event trace — nondeterminism"
+    assert a["events_run"] == b["events_run"]
+    assert a["prefix_hit_rate"] == b["prefix_hit_rate"]
+    assert a["promotions"] == b["promotions"]
+    assert a["failed"] == 0

@@ -27,6 +27,7 @@ import numpy as np
 
 from repro import configs
 from repro.api import AdminClient, CompletionRequest, ServingClient
+from repro.config import ServiceConfig
 from repro.core.controller import ClusterSpec, ControlPlane
 from repro.core.deployments import ModelDeploymentSpec
 from repro.core.disagg import DisaggregationSpec
@@ -39,11 +40,14 @@ from benchmarks.table1 import MAX_BATCHED_TOKENS, MODEL, NODE_CONFIGS
 def build_plane(disaggregated: bool, total: int = 4, prefill: int = 2,
                 node: str = "GPU-L",
                 transfer_bandwidth: float = 40e9,
-                sanitize: bool = False) -> ControlPlane:
+                sanitize: bool = False,
+                services: ServiceConfig = None) -> ControlPlane:
     """One model, `total` replicas — either one unified pool or a
     prefill/decode split — deployed declaratively so the reconciler does
     the pool bring-up exactly as production would.  ``sanitize`` runs the
-    plane on the TracingEventLoop (trace digest for determinism checks)."""
+    plane on the TracingEventLoop (trace digest for determinism checks);
+    ``services`` overrides the gateway `ServiceConfig` (e.g. tracing
+    knobs, benchmarks/trace_overhead.py)."""
     # paper hardware, repo engine shape: the TPU-adapted static decode
     # batch (max_num_seqs=64, scheduler.py) is where decode residency
     # actually gates prompt admission — the contention disaggregation
@@ -55,7 +59,8 @@ def build_plane(disaggregated: bool, total: int = 4, prefill: int = 2,
                        num_blocks=4096, block_size=32, max_num_seqs=64,
                        max_model_len=16_384,
                        max_prefill_tokens=MAX_BATCHED_TOKENS,
-                       sanitize=sanitize)
+                       sanitize=sanitize,
+                       services=services or ServiceConfig())
 
     from repro.engine.engine import LLMEngine
     from repro.engine.executor import SimExecutor
@@ -130,6 +135,10 @@ def run_scenario(mode: str, n: int, seed: int = 0, total: int = 4,
     if sanitize:
         out["trace_digest"] = cp.loop.trace_digest()
         out["events_run"] = cp.loop.events_run
+        # span forests are derived purely from loop-timed callbacks, so
+        # twin runs must agree on them exactly as they do on the event
+        # digest (tests/test_determinism.py)
+        out["span_forest_digest"] = cp.tracer.forest_digest()
     return out
 
 

@@ -81,6 +81,9 @@ def run_slo_scenario(policy: str, n: int, seed: int = 0,
     if sanitize:
         out["trace_digest"] = cp.loop.trace_digest()
         out["events_run"] = cp.loop.events_run
+        # request-span forests must be twin-run identical too (see
+        # disagg.run_scenario / tests/test_determinism.py)
+        out["span_forest_digest"] = cp.tracer.forest_digest()
     return out
 
 

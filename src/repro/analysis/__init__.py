@@ -12,6 +12,8 @@ with AST-level invariant checks over the sim-executed modules
   (the zombie-closure rule; see the PR-6 zombie-endpoint bug)
 * **R4** — status-code taxonomy and metric-key cross-checks
   (dead/dangling metric and untabulated-status detection)
+* **R5** — span handles bound from ``Tracer.start_span`` must be closed
+  on all code paths or handed off (the span-leak rule; ``core/`` only)
 * **LINT** — suppression hygiene (a suppression must carry a reason)
 
 CLI: ``python -m repro.analysis [paths] [--check-goldens tests/]`` —

@@ -1,4 +1,4 @@
-"""repro-lint core: AST invariant checks R1-R3 + suppression handling.
+"""repro-lint core: AST invariant checks R1-R3/R5 + suppression handling.
 
 Rules (see docs/analysis.md for the full catalogue):
 
@@ -20,12 +20,21 @@ Rules (see docs/analysis.md for the full catalogue):
   *inside the callback* (``.alive``/``.closed``/``.state``/dispatch
   ``epoch``/registry ``in``/``is None`` re-check), because the object
   can die between scheduling and firing (the PR-6 zombie-endpoint bug).
+* **R5** — the span-leak rule (``repro/core`` only): a span handle bound
+  from ``.start_span(...)`` must either be closed on every code path
+  (an unconditional ``handle.close(...)`` in the same function) or
+  escape to an owner who will (returned, stored, passed on).  A span
+  closed only inside a branch leaks open on the other paths and is
+  force-closed with a bogus end time at trace finish.  Unassigned
+  ``start_span(...)`` calls are trace-owned by construction (the
+  `RequestTrace` closes leftovers) and are never flagged.
 * **LINT** — a ``# repro-lint: disable=RULE(...)`` suppression must
   carry a non-empty reason.
 
 Scope: only modules the simulation executes (``repro/{core,engine,api,
 data}``).  ``train/``, ``launch/``, ``distributed/`` etc. run on real
-wall clocks by design and are exempt.
+wall clocks by design and are exempt.  R5 further restricts itself to
+``repro/core`` — the layer that owns tracing instrumentation.
 """
 from __future__ import annotations
 
@@ -485,8 +494,141 @@ class _R3Visitor(ast.NodeVisitor):
 
 
 # ---------------------------------------------------------------------------
+# R5: span handles must be closed on all code paths (core/ only)
+# ---------------------------------------------------------------------------
+
+def _r5_own_statements(fn) -> Iterable[ast.stmt]:
+    """Every statement of `fn`'s own body (nested defs are excluded —
+    they are visited as functions of their own)."""
+    todo = list(fn.body)
+    while todo:
+        s = todo.pop(0)
+        if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        yield s
+        for fname in ("body", "orelse", "finalbody"):
+            todo.extend(getattr(s, fname, None) or [])
+        for h in getattr(s, "handlers", None) or []:
+            todo.extend(h.body)
+
+
+def _r5_unguarded_statements(fn) -> Iterable[ast.stmt]:
+    """Statements that execute on EVERY path through `fn`: the straight-
+    line body, `try` bodies (they run until an exception) and `finally`
+    blocks.  If/While/For bodies, except handlers and `orelse` blocks
+    are conditional and excluded."""
+    todo = list(fn.body)
+    while todo:
+        s = todo.pop(0)
+        if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                          ast.If, ast.While, ast.For, ast.AsyncFor)):
+            continue
+        if isinstance(s, ast.Try):
+            todo.extend(s.body)
+            todo.extend(s.finalbody)
+            continue
+        if isinstance(s, (ast.With, ast.AsyncWith)):
+            todo.extend(s.body)
+            continue
+        yield s
+
+
+def _r5_closes_here(node: ast.AST, name: str) -> bool:
+    """True when `name.close(...)` is evaluated unconditionally within
+    this (already unconditionally-reached) expression tree: IfExp arms,
+    boolean short-circuit tails and lambda bodies are conditional."""
+    if isinstance(node, ast.Lambda):
+        return False
+    if isinstance(node, ast.IfExp):
+        return _r5_closes_here(node.test, name)
+    if isinstance(node, ast.BoolOp):
+        return _r5_closes_here(node.values[0], name) if node.values \
+            else False
+    if isinstance(node, ast.Call) \
+            and isinstance(node.func, ast.Attribute) \
+            and node.func.attr == "close" \
+            and isinstance(node.func.value, ast.Name) \
+            and node.func.value.id == name:
+        return True
+    return any(_r5_closes_here(c, name)
+               for c in ast.iter_child_nodes(node)
+               if not isinstance(c, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)))
+
+
+def _r5_escapes(fn, name: str) -> bool:
+    """True when the handle leaves the function's hands: returned,
+    yielded, passed as an argument, stored into a container/attribute or
+    captured by a nested def — its new owner is responsible for closing
+    it.  Attribute access on the handle itself (``h.close()``,
+    ``h.attrs``) and identity comparisons are not escapes."""
+    parents: dict = {}
+    for n in ast.walk(fn):
+        for c in ast.iter_child_nodes(n):
+            parents[c] = n
+    for n in ast.walk(fn):
+        if not (isinstance(n, ast.Name) and n.id == name
+                and isinstance(n.ctx, ast.Load)):
+            continue
+        p = parents.get(n)
+        if isinstance(p, ast.Attribute) and p.value is n:
+            continue
+        if isinstance(p, ast.Compare):
+            continue
+        return True
+    return False
+
+
+class _R5Visitor(ast.NodeVisitor):
+    """Span-leak check: ``x = <expr>.start_span(...)`` must reach an
+    unconditional ``x.close(...)`` in the same function, or hand the
+    handle off (escape).  Unassigned ``start_span`` calls are
+    trace-owned and exempt."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self.findings: list[Finding] = []
+
+    def _visit_function(self, node):
+        for stmt in _r5_own_statements(node):
+            if not (isinstance(stmt, ast.Assign)
+                    and len(stmt.targets) == 1
+                    and isinstance(stmt.targets[0], ast.Name)
+                    and isinstance(stmt.value, ast.Call)
+                    and isinstance(stmt.value.func, ast.Attribute)
+                    and stmt.value.func.attr == "start_span"):
+                continue
+            name = stmt.targets[0].id
+            closed = any(_r5_closes_here(s, name)
+                         for s in _r5_unguarded_statements(node))
+            if not closed and not _r5_escapes(node, name):
+                self.findings.append(Finding(
+                    self.path, stmt.lineno, "R5",
+                    f"span handle '{name}' from start_span() is not "
+                    f"closed on all code paths of {node.name}() and "
+                    f"never escapes — a leaked span is force-closed "
+                    f"with a bogus end time at trace finish; close it "
+                    f"unconditionally, hand it off, or drop the binding "
+                    f"(unassigned spans are trace-owned)"))
+        self.generic_visit(node)
+
+    visit_FunctionDef = _visit_function
+    visit_AsyncFunctionDef = _visit_function
+
+
+# ---------------------------------------------------------------------------
 # file / path runners
 # ---------------------------------------------------------------------------
+
+def in_core_scope(path: Path) -> bool:
+    """True for files under ``repro/core`` (the R5 scope: the layer that
+    owns tracing instrumentation)."""
+    parts = path.parts
+    for i, p in enumerate(parts[:-1]):
+        if p == "repro" and parts[i + 1] == "core":
+            return True
+    return False
+
 
 def in_sim_scope(path: Path) -> bool:
     parts = path.parts
@@ -506,7 +648,10 @@ def lint_file(path: Path) -> list[Finding]:
         except SyntaxError as e:
             return [Finding(rel, e.lineno or 0, "LINT",
                             f"syntax error: {e.msg}")]
-        for visitor_cls in (_R1Visitor, _R2Visitor, _R3Visitor):
+        visitors = [_R1Visitor, _R2Visitor, _R3Visitor]
+        if in_core_scope(path):
+            visitors.append(_R5Visitor)
+        for visitor_cls in visitors:
             v = visitor_cls(rel)
             v.visit(tree)
             findings.extend(v.findings)

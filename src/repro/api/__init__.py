@@ -21,6 +21,8 @@ from repro.api.schemas import (ChatChoice, ChatCompletionChunk,
                                CompletionResponse, Usage, encode_text)
 from repro.api.streaming import StreamSession, TokenEvent, TokenStream
 from repro.api.tenancy import TenantUsage
+from repro.api.traces import (TraceWatch, critical_path_to_dict,
+                              span_to_dict, trace_summary, trace_to_dict)
 
 __all__ = [
     "APIError", "APIStatusError", "AdminClient", "ChatChoice",
@@ -30,6 +32,7 @@ __all__ = [
     "ERROR_TABLE", "ErrorSpec", "MultiPendingCompletion",
     "PendingCompletion", "ServingClient",
     "StreamSession", "SUCCESS_STATUSES", "TenantUsage", "TokenEvent",
-    "TokenStream", "Usage", "WatchEvent", "encode_text", "error_for_status",
-    "validation_error",
+    "TokenStream", "TraceWatch", "Usage", "WatchEvent",
+    "critical_path_to_dict", "encode_text", "error_for_status",
+    "span_to_dict", "trace_summary", "trace_to_dict", "validation_error",
 ]

@@ -30,6 +30,8 @@ from dataclasses import dataclass
 from typing import Optional
 
 from repro.api.streaming import StreamSession
+from repro.api.traces import (TraceWatch, critical_path_to_dict,
+                              trace_summary, trace_to_dict)
 
 
 @dataclass
@@ -78,6 +80,9 @@ class AdminClient:
         # raise if the plane has none.
         self.reconciler = getattr(plane, "reconciler", plane)
         self.tenancy = getattr(plane, "tenancy", None)
+        # repro.core.tracing.Tracer (optional, like tenancy): backs the
+        # trace verbs below; raises if the plane records no traces
+        self.tracer = getattr(plane, "tracer", None)
         self.loop = getattr(plane, "loop", None) or self.reconciler.loop
 
     # -- verbs -------------------------------------------------------------
@@ -149,6 +154,45 @@ class AdminClient:
         w = DeploymentWatch()
         self.reconciler.watch(w._deliver)
         w.on_done(lambda _s: self.reconciler.unwatch(w._deliver))
+        return w
+
+    # -- trace verbs (repro.core.tracing; docs/tracing.md) -------------------
+    def _tracer(self):
+        if self.tracer is None:
+            raise TypeError("this control plane has no tracer "
+                            "(plane.tracer); trace verbs are unavailable")
+        return self.tracer
+
+    def traces(self, model: Optional[str] = None,
+               tenant: Optional[str] = None,
+               slo_miss: Optional[bool] = None,
+               error: Optional[bool] = None, limit: int = 50) -> list[dict]:
+        """``traces list``: retained trace summaries, newest first,
+        filtered by model / tenant / SLO-miss / error outcome."""
+        return [trace_summary(t) for t in self._tracer().query(
+            model=model, tenant=tenant, slo_miss=slo_miss, error=error,
+            limit=limit)]
+
+    def trace(self, trace_id: str) -> Optional[dict]:
+        """``traces get``: one trace's full span tree, or None."""
+        t = self._tracer().get(trace_id)
+        return None if t is None else trace_to_dict(t)
+
+    def trace_critical_path(self, trace_id: str) -> Optional[dict]:
+        """``traces critical-path``: the span chain bounding the
+        request's e2el, with per-segment durations and coverage."""
+        t = self._tracer().get(trace_id)
+        if t is None:
+            return None
+        return critical_path_to_dict(t, self._tracer().critical_path(t))
+
+    def watch_traces(self) -> TraceWatch:
+        """``traces watch``: live stream of retained traces (the same
+        `StreamSession` machinery as `watch()`) until `stop()`."""
+        w = TraceWatch()
+        tracer = self._tracer()
+        tracer.watch(w._deliver)
+        w.on_done(lambda _s: tracer.unwatch(w._deliver))
         return w
 
     # -- virtual-clock helpers ---------------------------------------------

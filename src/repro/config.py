@@ -239,6 +239,15 @@ class ServiceConfig:
     # slo_cost router's per-request weighting (keys must be SLO_CLASSES)
     slo_targets: dict = field(
         default_factory=lambda: dict(DEFAULT_SLO_TARGETS))
+    # distributed request tracing (repro.core.tracing): span trees are
+    # recorded for every request when enabled; trace_sample_rate is the
+    # head-based RETENTION probability (errors and SLO-misses are always
+    # retained), overridable per tenant, and trace_max_retained bounds
+    # the in-memory trace store (oldest evicted first)
+    tracing_enabled: bool = True
+    trace_sample_rate: float = 1.0
+    tenant_trace_sample_rates: dict = field(default_factory=dict)
+    trace_max_retained: int = 1024
 
 
 @dataclass(frozen=True)

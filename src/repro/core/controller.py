@@ -26,6 +26,7 @@ from repro.core.services import (EndpointGateway, EndpointWorker, JobWorker,
 from repro.core.simclock import EventLoop, TracingEventLoop
 from repro.core.slurm import SimNode, SimSlurm
 from repro.core.tenancy import TenancyManager, TenantSpec
+from repro.core.tracing import Tracer
 from repro.core.web_gateway import WebGateway
 from repro.engine.engine import LLMEngine
 from repro.engine.executor import SimExecutor
@@ -95,17 +96,22 @@ class ControlPlane:
         # multi-tenant QoS: specs/buckets/usage metering over the DB; the
         # gateway enforces (429 + WFQ weights), the scrape reports
         self.tenancy = TenancyManager(self.db, self.loop)
+        # distributed request tracing: the gateway stamps/closes span
+        # trees, the scrape folds per-span-kind histograms (knobs live on
+        # ServiceConfig — tracing_enabled, sample rates, retention bound)
+        self.tracer = Tracer(self.spec.services)
         self.web_gateway = WebGateway(
             self.db, self.loop, self.registry,
             services=self.spec.services,
             load_fn=self.metrics_gateway.endpoint_load,
             prior_fn=self.roofline_prior,
             service_estimator=self.estimate_service_time,
-            tenancy=self.tenancy)
+            tenancy=self.tenancy, tracer=self.tracer)
         self._cost_cache: dict[str, object] = {}
         # queued gateway demand feeds the scrape; fresh endpoints drain it
         self.metrics_gateway.attach_web_gateway(self.web_gateway)
         self.metrics_gateway.tenancy = self.tenancy
+        self.metrics_gateway.tracer = self.tracer
         self.endpoint_worker.on_ready = self.web_gateway.notify_ready
         # declarative layer: ModelDeployment specs reconciled on the loop;
         # the Job Worker is its executor, the autoscaler its spec patcher

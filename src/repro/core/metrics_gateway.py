@@ -37,6 +37,7 @@ class MetricsGateway:
         self.scale_events: list[tuple] = []   # (t, config_id, delta, reason)
         self.web_gateway = None               # set via attach_web_gateway
         self.tenancy = None                   # TenancyManager (ControlPlane)
+        self.tracer = None                    # repro.core.tracing.Tracer
         # Reconciler.patch_replicas, set by the ControlPlane: for configs
         # managed declaratively the webhook patches the deployment SPEC
         # (clamped to its min/max window) instead of mutating the DB row
@@ -55,6 +56,14 @@ class MetricsGateway:
         """Lets the scrape fold the gateway's queued-request depth into the
         per-config aggregates (queued demand counts toward scale-up)."""
         self.web_gateway = gw
+
+    def _append_sample(self, series: deque, now: float, sample: dict):
+        """THE history writer: every series append goes through here so
+        `history_window` trimming is enforced uniformly — an unbounded
+        deque on a long run is a memory leak, not a metric."""
+        series.append((now, sample))
+        while series and series[0][0] < now - self.history_window:
+            series.popleft()
 
     def endpoint_load(self, key: tuple) -> dict:
         """Latest scrape snapshot for one endpoint (node, port); {} if the
@@ -190,10 +199,12 @@ class MetricsGateway:
                        "tenant_queue_weighted": tenant_q}
             else:
                 continue
-            h = self.history[cfg["id"]]
-            h.append((now, agg))
-            while h and h[0][0] < now - self.history_window:
-                h.popleft()
+            if self.tracer is not None:
+                # per-span-kind duration histograms (p50/p95/p99) plus the
+                # window's SLO-miss count and exemplar trace ids, drained
+                # from the tracer's pending samples for this model
+                agg.update(self.tracer.fold(cfg["model_name"]))
+            self._append_sample(self.history[cfg["id"]], now, agg)
         # per-tenant series: in-flight, queued depth and running usage
         # totals per tenant — what a per-department Grafana board plots
         # and what billing reconciles against
@@ -218,10 +229,7 @@ class MetricsGateway:
                     "rejected_quota_total":
                         self.tenancy.rejections.get(name, 0),
                 }
-                h = self.tenant_history[name]
-                h.append((now, snap))
-                while h and h[0][0] < now - self.history_window:
-                    h.popleft()
+                self._append_sample(self.tenant_history[name], now, snap)
 
     def series(self, config_id: int, metric: str, since: float) -> list[tuple]:
         """History samples carrying `metric` (partial gateway-queue samples

@@ -39,7 +39,7 @@ from repro.api.errors import APIError, error_for_status, validation_error
 from repro.api.streaming import TokenStream
 from repro.config import ServiceConfig
 from repro.core.db import Database
-from repro.core.disagg import DisaggProfile
+from repro.core.disagg import DisaggProfile, request_phase
 from repro.core.kvstore import LinkContentionModel, chunk_plan
 from repro.core.router import GatewayQueue, endpoint_key, make_policy
 from repro.core.simclock import EventLoop
@@ -89,7 +89,7 @@ class WebGateway:
                  load_fn: Optional[Callable[[tuple], dict]] = None,
                  prior_fn: Optional[Callable] = None,
                  service_estimator: Optional[Callable] = None,
-                 tenancy=None):
+                 tenancy=None, tracer=None):
         self.db = db
         self.loop = loop
         self.registry = registry                  # (node, port) -> instance
@@ -102,6 +102,9 @@ class WebGateway:
         # repro.core.tenancy.TenancyManager (duck-typed; None = no QoS):
         # quota admission, WFQ weights, usage metering
         self.tenancy = tenancy
+        # repro.core.tracing.Tracer (None = tracing off): stamps every
+        # request with a span tree; recording never touches the EventLoop
+        self.tracer = tracer
         # api_key -> (tenant row | None, expiry); bounded LRU.  Negative
         # lookups cache too (short TTL) — a client retry-looping a bad key
         # must not buy a full auth_db_trip per attempt
@@ -281,6 +284,19 @@ class WebGateway:
             req.model = model_name
         stream = TokenStream.ensure(req, model=model_name, kind=kind)
 
+        tr = None
+        if self.tracer is not None and req.trace is None:
+            tr = self.tracer.begin(req, now)
+        if tr is not None:
+            tr.annotate(model=model_name, endpoint=kind,
+                        slo_class=req.slo_class, priority=req.priority,
+                        workflow_id=req.workflow_id,
+                        session_id=req.session_id)
+            # terminal close rides the stream's done hooks (fires exactly
+            # once: finish, queue expiry, displacement, instance death)
+            stream.on_done(
+                lambda s: self.tracer.finish(s.req, s, self.loop.now))
+
         try:
             req.sampling.validate()    # strong typing/validation layer
         except ValueError as e:
@@ -288,6 +304,14 @@ class WebGateway:
             return self._reject(VALIDATION_FAILED, stream, err)
 
         tenant, t_auth = self._authenticate(api_key, now)
+        if tr is not None:
+            # virtual-latency span: the auth cost is charged into the
+            # forward delay, so the span models [arrival, arrival + cost]
+            tr.start_span(
+                "gateway.auth", now,
+                cache_hit=t_auth == self.lat.auth_cache_hit).close(
+                now + t_auth,
+                status="ok" if tenant is not None else "error")
         if tenant is None:
             self.stats.rejected_auth += 1
             return self._reject(UNAUTHENTICATED, stream,
@@ -295,6 +319,8 @@ class WebGateway:
         # the authenticated tenant rides the request: WFQ bucket key,
         # session-affinity namespace, usage-metering account
         req.tenant = tenant["name"]
+        if tr is not None:
+            tr.annotate(tenant=req.tenant)
 
         if not self.db["ai_model_configurations"].select(
                 model_name=model_name):
@@ -330,6 +356,12 @@ class WebGateway:
                     # charge auth_cache_hit a second time
                     dispatch=lambda r: self._route_and_forward(
                         model_name, r, t_auth=0.0)):
+                if tr is not None:
+                    # WFQ/TTL hold: closed by _forward on drain-dispatch,
+                    # or force-closed (error) when the entry expires or is
+                    # displaced and the stream fails terminally
+                    tr.start_span("gateway.queue", now,
+                                  phase=request_phase(req))
                 return self._status(QUEUED), stream, None
             self.stats.rejected_no_endpoint += 1
         if status != OK:
@@ -397,9 +429,24 @@ class WebGateway:
     def _forward(self, ep: dict, inst, req: Request, t_auth: float,
                  router=None):
         router = router if router is not None else self.router
+        now = self.loop.now
         delay = t_auth + self.lat.endpoint_db_trip + self.lat.forward_hop
         key = endpoint_key(ep)
         stream = TokenStream.ensure(req)
+        if req.trace is not None:
+            # a queued request's WFQ wait ends at this dispatch (no-op for
+            # the direct-forward path, where no gateway.queue span is open)
+            req.trace.close_span("gateway.queue", now)
+            # one router.select span per dispatch attempt: a disaggregated
+            # request gets two (hop attr), a transparent retry more, and a
+            # fallback-to-unified shows up as phase="unified" on the
+            # endpoint it actually landed on
+            req.trace.start_span(
+                "router.select", now,
+                endpoint=f"{key[0]}:{key[1]}", policy=router.name,
+                phase=ep.get("phase") or "unified",
+                hop=request_phase(req),
+                retry=req.disagg_retries).close(now + delay)
         # rebind (never wrap): response streaming adds the return hop to
         # client-side timestamps, and the finish hook releases this
         # dispatch's endpoint slot in the router
@@ -459,14 +506,34 @@ class WebGateway:
         stream.release_dispatch()
         model = req.model
         sizes = chunk_plan(handoff.kv_bytes, prof.stream_chunks)
+        trace = req.trace
 
         def send(i: int):
             t0 = self.loop.now
+            if trace is not None and i == 0:
+                # parent for the per-chunk children, anchored at the first
+                # link reservation (loop time — the engine's `now` is the
+                # virtual t_done, which the link model does not use);
+                # closed when the last chunk lands, or force-closed if the
+                # stream dies mid-transfer
+                trace.start_span("kv.handoff", t0, bytes=handoff.kv_bytes,
+                                 chunks=len(sizes))
             done = link.transmit(sizes[i], t0)
             # per-chunk charge (incl. link queueing): chunks of one
             # handoff are back-to-back, so the sum is the true span —
             # exactly the old atomic charge when the link is idle
             req.metrics.kv_transfer_time += done - t0
+            if trace is not None:
+                par = trace.open_span("kv.handoff")
+                # link_wait = time queued behind other handoffs on the
+                # shared NIC, beyond the chunk's own serialisation time
+                trace.start_span(
+                    "kv.handoff.chunk", t0, parent=par, chunk=i,
+                    bytes=sizes[i],
+                    link_wait=(done - t0) - sizes[i] / link.bandwidth
+                    ).close(done)
+                if i + 1 == len(sizes) and par is not None:
+                    par.close(done)
             if i == 0:
                 def dispatch_decode():
                     # the transfer window can outlive the request (queue-
@@ -507,6 +574,12 @@ class WebGateway:
         # first-token time, so neither the terminal response nor the
         # engine-side ttft/e2el mixes the two runs
         req.metrics.first_token_time = None
+        if req.trace is not None:
+            # close every open span as errored: the re-run's spans appear
+            # as SIBLINGS next to the interrupted attempt's, so the lost
+            # hop stays visible instead of vanishing
+            req.trace.interrupt(self.loop.now, "instance_lost")
+            req.trace.annotate(retries=req.disagg_retries)
         TokenStream.ensure(req).restart()
         self.stats.disagg_retries += 1
         model = req.model
@@ -535,6 +608,9 @@ class WebGateway:
                 req, model_name, self.loop.now,
                 dispatch=lambda r: self._route_and_forward(
                     model_name, r, t_auth=0.0)):
+            if req.trace is not None:
+                req.trace.start_span("gateway.queue", self.loop.now,
+                                     phase=request_phase(req))
             return
         req.status = RequestStatus.FAILED
         self.stats.rejected_no_endpoint += 1

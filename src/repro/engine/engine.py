@@ -112,9 +112,24 @@ class LLMEngine:
         req.output_tokens.append(token)
         if req.metrics.first_token_time is None:
             req.metrics.first_token_time = now
+        done = req.is_finished(token)
+        if req.trace is not None:
+            # span transitions are trace-only and must precede the token
+            # callback (the stream closes inside it and the tracer's
+            # terminal hook walks the tree) — but the METRIC stamps below
+            # stay after it, matching what every stream-close observer
+            # (tenancy accounting, router note_finish) has always seen
+            pre = req.trace.open_span("engine.prefill")
+            if pre is not None:
+                pre.close(now, tokens=req.prompt_len)
+                if not done and self.phase_mode != "prefill_only":
+                    req.trace.start_span("engine.decode", now)
+            if done:
+                req.trace.close_span("engine.decode", now,
+                                     tokens=req.output_len)
         if req.on_token is not None:
             req.on_token(req, token, now)
-        if req.is_finished(token):
+        if done:
             req.metrics.finish_time = now
             req.metrics.prompt_tokens = req.prompt_len
             req.metrics.completion_tokens = req.output_len

@@ -88,6 +88,9 @@ class RequestMetrics:
     # must measure the local wait, while ttft/e2el keep the original arrival
     last_enqueue_time: Optional[float] = None
     first_scheduled_time: Optional[float] = None
+    # admission at the CURRENT engine (stamped on every hop, unlike
+    # first_scheduled_time which keeps the first admission for ttft)
+    last_scheduled_time: Optional[float] = None
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
     # seconds spent moving KV blocks between phase pools (disaggregation)
@@ -100,9 +103,31 @@ class RequestMetrics:
 
     @property
     def queue_time(self) -> Optional[float]:
+        """GLOBAL first-admission wait: first scheduling anywhere minus the
+        original arrival.  On a disaggregated request this is the prefill
+        hop's wait only — per-hop signals must use `local_queue_time`."""
         if self.first_scheduled_time is None:
             return None
         return self.first_scheduled_time - self.arrival_time
+
+    @property
+    def local_queue_time(self) -> Optional[float]:
+        """Wait in the CURRENT engine's queue: last admission minus last
+        enqueue.  This is the unambiguous per-hop signal — on the decode
+        hop of a disaggregated request, `queue_time` still reports the
+        prefill hop's wait while this reports the decode-local one."""
+        if self.last_scheduled_time is None:
+            return None
+        return self.last_scheduled_time - (
+            self.last_enqueue_time if self.last_enqueue_time is not None
+            else self.arrival_time)
+
+    def waited(self, now: float) -> float:
+        """Time spent so far in the current engine's queue (the
+        scheduler's queue-time autoscaling signal; explicitly local)."""
+        return now - (self.last_enqueue_time
+                      if self.last_enqueue_time is not None
+                      else self.arrival_time)
 
     @property
     def ttft(self) -> Optional[float]:
@@ -166,6 +191,10 @@ class Request:
     # assigned instance mid-stream
     handoff: Optional[object] = None
     disagg_retries: int = 0
+    # distributed tracing (repro.core.tracing.RequestTrace), stamped by
+    # the Web Gateway's Tracer; engine code only duck-types it (the
+    # engine layer must not import core/) and guards on `is not None`
+    trace: Optional[object] = None
 
     @property
     def prompt_len(self) -> int:

@@ -75,6 +75,13 @@ class Scheduler:
             req.metrics.arrival_time = now
         req.metrics.last_enqueue_time = now
         req.status = RequestStatus.WAITING
+        if req.trace is not None:
+            # one engine.queue span per hop (the decode hop of a
+            # disaggregated request gets its own, a sibling of the first)
+            req.trace.start_span(
+                "engine.queue", now,
+                phase="decode" if (req.handoff is not None
+                                   or req.output_tokens) else "prefill")
         self.waiting.append(req)
 
     def has_work(self) -> bool:
@@ -86,10 +93,7 @@ class Scheduler:
         wait into the local signal)."""
         if not self.waiting:
             return 0.0
-        m = self.waiting[0].metrics
-        enq = m.last_enqueue_time if m.last_enqueue_time is not None \
-            else m.arrival_time
-        return now - enq
+        return self.waiting[0].metrics.waited(now)
 
     # ------------------------------------------------------------------
     def _try_admit(self, now: float) -> Optional[RunningSeq]:
@@ -102,6 +106,9 @@ class Scheduler:
             # reject outright (gateway-level validation usually catches this)
             self.waiting.popleft()
             req.status = RequestStatus.FAILED
+            if req.trace is not None:
+                req.trace.close_span("engine.queue", now, status="error",
+                                     reason="over_model_len")
             return self._try_admit(now)
         kv = SequenceKV(self.alloc)
         # match_prefix consults the tier hierarchy transparently: demoted
@@ -118,11 +125,21 @@ class Scheduler:
                          admitted_at=now)
         if req.metrics.first_scheduled_time is None:
             req.metrics.first_scheduled_time = now
+        req.metrics.last_scheduled_time = now
         req.status = RequestStatus.RUNNING
+        if req.trace is not None:
+            req.trace.close_span("engine.queue", now)
+            # a resumed decode hop (or a preempted-and-readmitted decode)
+            # goes straight to decoding; everything else prefills first
+            if req.output_tokens:
+                req.trace.start_span("engine.decode", now, resumed=True)
+            else:
+                req.trace.start_span("engine.prefill", now,
+                                     cached_tokens=covered)
         self.running.append(seq)
         return seq
 
-    def _preempt_latest(self, exclude=()) -> Optional[RunningSeq]:
+    def _preempt_latest(self, now: float, exclude=()) -> Optional[RunningSeq]:
         """Evict the most recently admitted running sequence."""
         candidates = [s for s in self.running if s not in exclude]
         if not candidates:
@@ -134,6 +151,15 @@ class Scheduler:
         victim.req.status = RequestStatus.PREEMPTED
         victim.req.metrics.preemptions += 1
         victim.req.output_tokens = []   # RECOMPUTE policy: restart
+        if victim.req.trace is not None:
+            # the RECOMPUTE re-run shows up as sibling spans, not a
+            # silent rewrite of the evicted ones
+            victim.req.trace.close_span("engine.decode", now,
+                                        status="preempted")
+            victim.req.trace.close_span("engine.prefill", now,
+                                        status="preempted")
+            victim.req.trace.start_span("engine.queue", now,
+                                        phase="prefill", preempted=True)
         self.waiting.appendleft(victim.req)
         return victim
 
@@ -162,7 +188,7 @@ class Scheduler:
                     granted = True
                     break
                 except OutOfBlocks:
-                    victim = self._preempt_latest(exclude=tuple(ready))
+                    victim = self._preempt_latest(now, exclude=tuple(ready))
                     if victim is None:
                         break
                     preempted.append(victim)
@@ -196,7 +222,7 @@ class Scheduler:
                     break
                 except OutOfBlocks:
                     victim = self._preempt_latest(
-                        exclude=(s,) + tuple(ready)
+                        now, exclude=(s,) + tuple(ready)
                         + tuple(p for p, _ in prefills))
                     if victim is None:
                         ok = False

@@ -325,3 +325,107 @@ def test_real_tree_is_clean():
 def test_real_tree_cli_exit_0(capsys):
     assert lint_main([str(SRC_REPRO),
                       "--check-goldens", str(REPO / "tests")]) == 0
+
+
+# ---------------------------------------------------------------------------
+# R5: span handles must be closed on all code paths (core/ scope only)
+# ---------------------------------------------------------------------------
+
+def test_r5_fires_on_leaked_span_handle(sim_file):
+    src = (
+        "def handle(tr, now):\n"
+        "    sp = tr.start_span('gateway.auth', now)\n"
+        "    do_work()\n"
+    )
+    findings = lint_file(sim_file(src))
+    assert rules_of(findings) == ["R5"]
+    assert "sp" in findings[0].message and findings[0].line == 2
+
+
+def test_r5_fires_on_branch_only_close(sim_file):
+    # closed on the happy path only: the error path leaks the span
+    src = (
+        "def handle(tr, now, ok):\n"
+        "    sp = tr.start_span('gateway.auth', now)\n"
+        "    if ok:\n"
+        "        sp.close(now)\n"
+    )
+    assert rules_of(lint_file(sim_file(src))) == ["R5"]
+
+
+def test_r5_quiet_on_unconditional_close(sim_file):
+    src = (
+        "def handle(tr, now):\n"
+        "    sp = tr.start_span('gateway.auth', now)\n"
+        "    work()\n"
+        "    sp.close(now)\n"
+    )
+    assert lint_file(sim_file(src)) == []
+
+
+def test_r5_quiet_on_finally_close(sim_file):
+    src = (
+        "def handle(tr, now):\n"
+        "    sp = tr.start_span('gateway.auth', now)\n"
+        "    try:\n"
+        "        work()\n"
+        "    finally:\n"
+        "        sp.close(now)\n"
+    )
+    assert lint_file(sim_file(src)) == []
+
+
+def test_r5_quiet_when_handle_escapes(sim_file):
+    # whoever receives the handle owns closing it
+    src = (
+        "def begin(tr, now, out):\n"
+        "    sp = tr.start_span('engine.queue', now)\n"
+        "    out.append(sp)\n"
+        "\n"
+        "def begin2(tr, now):\n"
+        "    sp = tr.start_span('engine.queue', now)\n"
+        "    return sp\n"
+    )
+    assert lint_file(sim_file(src)) == []
+
+
+def test_r5_quiet_on_trace_owned_and_inline_chains(sim_file):
+    # unassigned spans are trace-owned (force-closed at finish); the
+    # inline start/close chain is the sanctioned analytic-span idiom
+    src = (
+        "def handle(tr, now, dt):\n"
+        "    tr.start_span('engine.queue', now)\n"
+        "    tr.start_span('gateway.auth', now).close(now + dt)\n"
+    )
+    assert lint_file(sim_file(src)) == []
+
+
+def test_r5_checks_nested_defs_as_their_own_functions(sim_file):
+    src = (
+        "def outer(tr, now):\n"
+        "    def cb():\n"
+        "        sp = tr.start_span('kv.handoff', now)\n"
+        "    return cb\n"
+    )
+    findings = lint_file(sim_file(src))
+    assert rules_of(findings) == ["R5"] and findings[0].line == 3
+
+
+def test_r5_suppressible_with_reason(sim_file):
+    src = (
+        "def handle(tr, now):\n"
+        "    sp = tr.start_span('gateway.auth', now)"
+        "  # repro-lint: disable=R5(closed by the drain pass)\n"
+    )
+    assert lint_file(sim_file(src)) == []
+
+
+def test_r5_exempt_outside_core_scope(tmp_path):
+    # engine/ and api/ never import core tracing; handles there are
+    # duck-typed and out of R5's contract
+    d = tmp_path / "repro" / "engine"
+    d.mkdir(parents=True)
+    p = d / "mod.py"
+    p.write_text("def handle(tr, now):\n"
+                 "    sp = tr.start_span('engine.queue', now)\n")
+    assert lint_file(p) == []

@@ -213,6 +213,8 @@ def _assert_twin_runs(run, *args, **kw):
     assert a["trace_digest"] == b["trace_digest"], \
         "same scenario, different event trace — nondeterminism"
     assert a["events_run"] == b["events_run"]
+    assert a["span_forest_digest"] == b["span_forest_digest"], \
+        "same scenario, different span forest — tracing nondeterminism"
     assert _strip_volatile(a) == _strip_volatile(b)
     return a
 

@@ -19,6 +19,19 @@ class ClientRecord:
     t_last: Optional[float] = None
     n_tokens: int = 0
     slo_class: Optional[str] = None
+    error_status: Optional[int] = None
+    rejected: bool = False     # turned away AT SUBMIT (vs failed later)
+
+    @property
+    def shed(self) -> bool:
+        """Was this request deliberately turned away by an admission
+        policy (429 tenant throttle / 461 burn-rate shed) rather than
+        served badly?  Only submit-time rejections count: the client got
+        an honest retry_after before any work was accepted.  A request
+        the gateway ACCEPTED and then failed (queue-TTL expiry, dead
+        instance — also 461/462, but delivered on the stream later) is a
+        miss, not a shed."""
+        return self.rejected and self.error_status in (429, 461)
 
     def meets_slo(self, targets=None) -> Optional[bool]:
         """Did this request meet BOTH its class TTFT and E2EL targets?
@@ -71,7 +84,22 @@ class ClientRecorder:
             rec.t_last = t
             rec.n_tokens += 1
 
+        def on_done(s):
+            if getattr(s, "error", None) is not None:
+                rec.error_status = s.error.http_status
+
         stream.subscribe(on_token)
+        stream.on_done(on_done)
+        return rec
+
+    def reject(self, key, now: float, status: int,
+               slo_class: Optional[str] = None) -> ClientRecord:
+        """Record a gateway rejection raised at submit time (429 tenant
+        throttle / 461 shed): the request never got a stream, but its
+        outcome belongs in the same per-class accounting."""
+        rec = self._record(key, now, slo_class)
+        rec.error_status = status
+        rec.rejected = True
         return rec
 
     def submit(self, req, now: float):
@@ -101,6 +129,7 @@ class ClientRecorder:
         dur = t_end - t_start
         out = {
             "completed": len(recs),
+            "shed": sum(1 for r in self.records.values() if r.shed),
             "duration_s": dur,
             "e2el_median_ms": float(np.median(e2el) * 1e3),
             "e2el_p99_ms": float(np.percentile(e2el, 99) * 1e3),
@@ -124,16 +153,24 @@ class ClientRecorder:
         ``slo_attainment_<class>`` (fraction meeting both TTFT and E2EL
         targets — unfinished requests count as misses, so a policy cannot
         game the metric by starving work) plus per-class p99 TTFT of the
-        finishers.  Empty when no record carries a class."""
+        finishers.  Shed requests (429/461 — an explicit admission
+        rejection with a retry hint) are reported as ``slo_shed_<class>``
+        rates and EXCLUDED from the attainment denominator: turning a
+        request away honestly is a different outcome from serving it
+        late, and the shed rate right next to the attainment number keeps
+        the trade visible.  Empty when no record carries a class."""
         by_class: dict = {}
         for r in self.records.values():
             if r.slo_class is not None:
                 by_class.setdefault(r.slo_class, []).append(r)
         out = {}
         for cls, recs in sorted(by_class.items()):
-            met = sum(1 for r in recs if r.meets_slo(self.slo_targets))
-            out[f"slo_attainment_{cls}"] = met / len(recs)
-            ttfts = [r.ttft for r in recs if r.t_first is not None]
+            shed = sum(1 for r in recs if r.shed)
+            kept = [r for r in recs if not r.shed]
+            met = sum(1 for r in kept if r.meets_slo(self.slo_targets))
+            out[f"slo_attainment_{cls}"] = met / len(kept) if kept else 0.0
+            out[f"slo_shed_{cls}"] = shed / len(recs)
+            ttfts = [r.ttft for r in kept if r.t_first is not None]
             if ttfts:
                 out[f"ttft_p99_{cls}_ms"] = float(
                     np.percentile(np.array(ttfts), 99) * 1e3)

@@ -14,6 +14,9 @@ with AST-level invariant checks over the sim-executed modules
   (dead/dangling metric and untabulated-status detection)
 * **R5** — span handles bound from ``Tracer.start_span`` must be closed
   on all code paths or handed off (the span-leak rule; ``core/`` only)
+* **R6** — every series the scrape/telemetry layer emits must be
+  declared in ``core/telemetry.METRIC_REGISTRY`` (the unregistered-
+  emission rule, the inverse of R4's dangling-metric check)
 * **LINT** — suppression hygiene (a suppression must carry a reason)
 
 CLI: ``python -m repro.analysis [paths] [--check-goldens tests/]`` —

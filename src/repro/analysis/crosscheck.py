@@ -1,20 +1,28 @@
-"""R4: cross-file contract checks (status taxonomy + metric keys).
+"""R4/R6: cross-file contract checks (status taxonomy + metric keys).
 
-Two wire contracts span several modules and silently rot without a
+Three wire contracts span several modules and silently rot without a
 mechanical check:
 
-* **Status taxonomy** — every HTTP status the gateway path can emit
+* **Status taxonomy** (R4) — every HTTP status the gateway path can emit
   (the ALL-CAPS constants in ``core/web_gateway.py``/``core/tenancy.py``
   and every status passed to ``error_for_status``) must appear in the
   ``api/errors.py`` taxonomy (``ERROR_TABLE`` + ``SUCCESS_STATUSES``);
   with ``--check-goldens`` the ``GOLDEN`` table in ``tests/test_api.py``
   must cover exactly the same set.
-* **Metric keys** — every engine-snapshot key the MetricsGateway or a
-  routing policy reads must be emitted by ``engine/metrics.snapshot``,
+* **Metric keys** (R4) — every engine-snapshot key the MetricsGateway or
+  a routing policy reads must be emitted by ``engine/metrics.snapshot``,
   and every metric an ``AlertRule`` references must be emitted by the
   scrape aggregation (dangling-metric detection): an alert rule watching
   a key nobody emits never fires, which is an autoscaler outage, not a
   visible error.
+* **Metric registry** (R6) — the inverse direction: every series key the
+  scrape/telemetry layer EMITS (``agg[...]``/``snap``/``out`` stores in
+  ``core/metrics_gateway.py`` and ``core/telemetry.py``, f-string keys
+  expanded over pools / SLO classes / span kinds) must appear in the
+  declared ``METRIC_REGISTRY`` of ``core/telemetry.py`` — a typo'd
+  emission creates a series nothing can ever reference, invisible until
+  a dashboard or rule silently reads zeros.  The check activates only
+  when ``core/telemetry.py`` declares a parsable registry.
 
 All checks are static (AST only) so they run in CI before any test.
 """
@@ -92,16 +100,19 @@ def _snapshot_keys(tree: ast.Module) -> set[str]:
     return set()
 
 
-def _expand_fstring(node: ast.JoinedStr) -> list[str]:
-    """Expand f"...{pool}..." over the disagg pools; [] if unexpandable."""
+def _expand_fstring(node: ast.JoinedStr,
+                    varmap: Optional[dict] = None) -> list[str]:
+    """Expand f"...{var}..." over each known variable's value set
+    (default: just the disagg pools); [] if unexpandable."""
+    varmap = varmap if varmap is not None else {"pool": _POOLS}
     out = [""]
     for part in node.values:
         if isinstance(part, ast.Constant) and isinstance(part.value, str):
             out = [o + part.value for o in out]
         elif isinstance(part, ast.FormattedValue) \
                 and isinstance(part.value, ast.Name) \
-                and part.value.id == "pool":
-            out = [o + p for p in _POOLS for o in out]
+                and part.value.id in varmap:
+            out = [o + p for p in varmap[part.value.id] for o in out]
         else:
             return []
     return out
@@ -163,6 +174,90 @@ def _snapshot_reads(tree: ast.Module) -> list[tuple[str, int]]:
                 and _is_snap_receiver(node.func.value):
             reads.append((node.args[0].value, node.lineno))
     return reads
+
+
+def _tuple_str_constant(tree: Optional[ast.Module], name: str) -> tuple:
+    """Module-level ``NAME = ("a", "b", ...)`` string tuple, or ()."""
+    if tree is None:
+        return ()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and node.targets[0].id == name \
+                and isinstance(node.value, (ast.Tuple, ast.List)):
+            vals = tuple(e.value for e in node.value.elts
+                         if isinstance(e, ast.Constant)
+                         and isinstance(e.value, str))
+            if vals:
+                return vals
+    return ()
+
+
+#: the registry's closed vocabulary of series types
+_METRIC_TYPES = ("counter", "gauge", "histogram", "exemplars")
+
+
+def _metric_registry(tree: Optional[ast.Module]):
+    """Parse ``METRIC_REGISTRY = {...}`` from core/telemetry.py:
+    name -> (value node, line).  None when absent or not a dict literal —
+    the R6 gate (a tree without a declared registry is not checked)."""
+    if tree is None:
+        return None
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and node.targets[0].id == "METRIC_REGISTRY":
+            if not isinstance(node.value, ast.Dict):
+                return None
+            out = {}
+            for k, v in zip(node.value.keys, node.value.values):
+                if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                    out[k.value] = (v, k.lineno)
+            return out
+    return None
+
+
+def _expand_braces(name: str, varmap: dict) -> list[str]:
+    """Expand ``"...{pool}..."``-style registry templates over each known
+    variable's value set (plain strings pass through unchanged)."""
+    out = [name]
+    for var, vals in varmap.items():
+        tok = "{%s}" % var
+        nxt = []
+        for o in out:
+            nxt.extend([o.replace(tok, v) for v in vals]
+                       if tok in o else [o])
+        out = nxt
+    return out
+
+
+def _emitted_keys(tree: ast.Module, receivers: set[str],
+                  varmap: dict) -> list[tuple[str, int]]:
+    """(series key, line) of every emission into a scrape/telemetry
+    output dict: dict literals assigned to a receiver name plus every
+    ``recv[...]`` subscript store, f-string keys expanded over
+    `varmap`."""
+    keys: list[tuple[str, int]] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        for t in node.targets:
+            if isinstance(t, ast.Name) and t.id in receivers \
+                    and isinstance(node.value, ast.Dict):
+                keys.extend((k.value, k.lineno) for k in node.value.keys
+                            if isinstance(k, ast.Constant)
+                            and isinstance(k.value, str))
+            if isinstance(t, ast.Subscript) \
+                    and isinstance(t.value, ast.Name) \
+                    and t.value.id in receivers:
+                sl = t.slice
+                if isinstance(sl, ast.Constant) \
+                        and isinstance(sl.value, str):
+                    keys.append((sl.value, t.lineno))
+                elif isinstance(sl, ast.JoinedStr):
+                    keys.extend((k, t.lineno)
+                                for k in _expand_fstring(sl, varmap))
+    return keys
 
 
 def _alert_rule_metrics(tree: ast.Module) -> list[tuple[str, int]]:
@@ -275,16 +370,70 @@ def crosscheck(repro_root: Path,
                         f"engine-snapshot key '{key}' is read here but "
                         f"never emitted by engine/metrics.snapshot() "
                         f"(dangling metric)"))
+    tele_path = repro_root / "core" / "telemetry.py"
+    tele_tree = _parse(tele_path)
+    varmap = {
+        "pool": _POOLS,
+        "cls": _tuple_str_constant(_parse(repro_root / "config.py"),
+                                   "SLO_CLASSES")
+        or ("interactive", "standard", "batch"),
+        "kind": _tuple_str_constant(_parse(repro_root / "core"
+                                           / "tracing.py"), "SPAN_KINDS")
+        or ("request", "engine.prefill", "engine.decode"),
+    }
     if agg_keys:
+        # alert rules may also watch telemetry-registry series the scrape
+        # re-emits (burn rates, attainment) — expand the registry too so
+        # the R4 dangling-metric check and R6 agree on what exists
+        rule_universe = set(agg_keys)
+        if tele_tree is not None:
+            registry = _metric_registry(tele_tree) or {}
+            for name in registry:
+                rule_universe.update(_expand_braces(name, varmap))
         for p in sorted((repro_root / "core").glob("*.py")):
             t = trees.get(p) or _parse(p)
             if t is None:
                 continue
             for metric, line in _alert_rule_metrics(t):
-                if metric not in agg_keys:
+                if metric not in rule_universe:
                     findings.append(Finding(
                         str(p), line, "R4",
                         f"AlertRule references metric '{metric}' which the "
                         f"MetricsGateway scrape never emits (the rule can "
                         f"never fire — dangling metric)"))
+
+    # -- R6: emitted series must be declared in the metric registry --------
+    registry = _metric_registry(tele_tree)
+    if registry is not None:
+        registered: set[str] = set()
+        for name, (value, line) in registry.items():
+            registered.update(_expand_braces(name, varmap))
+            # shape: every entry is {"type": <closed vocab>, "labels": (...)}
+            if not isinstance(value, ast.Dict):
+                findings.append(Finding(
+                    str(tele_path), line, "R6",
+                    f"METRIC_REGISTRY entry '{name}' is not a dict literal"))
+                continue
+            entry = {k.value: v for k, v in zip(value.keys, value.values)
+                     if isinstance(k, ast.Constant)}
+            mtype = entry.get("type")
+            if not (isinstance(mtype, ast.Constant)
+                    and mtype.value in _METRIC_TYPES):
+                findings.append(Finding(
+                    str(tele_path), line, "R6",
+                    f"METRIC_REGISTRY entry '{name}' needs a 'type' in "
+                    f"{list(_METRIC_TYPES)}"))
+        for p in (gw_path, tele_path):
+            t = _parse(p)
+            if t is None:
+                continue
+            for key, line in _emitted_keys(t, {"agg", "snap", "out"},
+                                           varmap):
+                if key not in registered:
+                    findings.append(Finding(
+                        str(p), line, "R6",
+                        f"series '{key}' is emitted here but not declared "
+                        f"in core/telemetry.METRIC_REGISTRY (unregistered "
+                        f"emission — nothing can reference it by "
+                        f"contract)"))
     return findings

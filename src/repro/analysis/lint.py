@@ -661,8 +661,9 @@ def lint_file(path: Path) -> list[Finding]:
 
 def lint_paths(paths: Iterable[Path],
                goldens_dir: Optional[Path] = None) -> list[Finding]:
-    """Lint every .py under `paths` (R1-R3 on sim-scope files) and run the
-    R4 cross-file checks when a repro package root is among them."""
+    """Lint every .py under `paths` (R1-R3/R5 on sim-scope files) and run
+    the R4/R6 cross-file checks when a repro package root is among
+    them."""
     from repro.analysis.crosscheck import crosscheck
 
     files: list[Path] = []

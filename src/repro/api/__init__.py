@@ -9,6 +9,7 @@ program against; `repro.core` (the gateway, the reconciler) imports it,
 never the other way around.
 """
 from repro.api.admin import AdminClient, DeploymentWatch, WatchEvent
+from repro.api.alerts import AlertWatch
 from repro.api.client import (MultiPendingCompletion, PendingCompletion,
                               ServingClient)
 from repro.api.errors import (APIError, APIStatusError, ERROR_TABLE,
@@ -25,7 +26,7 @@ from repro.api.traces import (TraceWatch, critical_path_to_dict,
                               span_to_dict, trace_summary, trace_to_dict)
 
 __all__ = [
-    "APIError", "APIStatusError", "AdminClient", "ChatChoice",
+    "APIError", "APIStatusError", "AdminClient", "AlertWatch", "ChatChoice",
     "ChatCompletionChunk", "ChatCompletionRequest", "ChatCompletionResponse",
     "ChatMessage", "ChunkChoice", "ChunkDelta", "CompletionChoice",
     "CompletionRequest", "CompletionResponse", "DeploymentWatch",

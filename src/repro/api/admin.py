@@ -29,6 +29,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Optional
 
+from repro.api.alerts import AlertWatch
 from repro.api.streaming import StreamSession
 from repro.api.traces import (TraceWatch, critical_path_to_dict,
                               trace_summary, trace_to_dict)
@@ -83,6 +84,9 @@ class AdminClient:
         # repro.core.tracing.Tracer (optional, like tenancy): backs the
         # trace verbs below; raises if the plane records no traces
         self.tracer = getattr(plane, "tracer", None)
+        # repro.core.telemetry.TelemetryStore (optional): backs the
+        # burn-alert verbs below
+        self.telemetry = getattr(plane, "telemetry", None)
         self.loop = getattr(plane, "loop", None) or self.reconciler.loop
 
     # -- verbs -------------------------------------------------------------
@@ -193,6 +197,32 @@ class AdminClient:
         tracer = self._tracer()
         tracer.watch(w._deliver)
         w.on_done(lambda _s: tracer.unwatch(w._deliver))
+        return w
+
+    # -- alert verbs (repro.core.telemetry; docs/observability.md) -----------
+    def _telemetry(self):
+        if self.telemetry is None:
+            raise TypeError("this control plane has no telemetry store "
+                            "(plane.telemetry); alert verbs are unavailable")
+        return self.telemetry
+
+    def alerts(self, model: Optional[str] = None,
+               slo_class: Optional[str] = None,
+               state: Optional[str] = None) -> list[dict]:
+        """``alerts list``: burn-rate alert snapshots — live alerts
+        (pending/firing) newest first, then recently resolved ones —
+        filtered by model / SLO class / lifecycle state."""
+        return self._telemetry().alerts(model=model, slo_class=slo_class,
+                                        state=state)
+
+    def watch_alerts(self) -> AlertWatch:
+        """``alerts watch``: live stream of alert lifecycle transitions
+        (the same `StreamSession` machinery as `watch()`) until
+        `stop()`."""
+        w = AlertWatch()
+        telemetry = self._telemetry()
+        telemetry.watch(w._deliver)
+        w.on_done(lambda _s: telemetry.unwatch(w._deliver))
         return w
 
     # -- virtual-clock helpers ---------------------------------------------

@@ -192,6 +192,16 @@ DEFAULT_SLO_TARGETS = {
     "batch": SLOTarget(ttft=60.0, e2el=1800.0),
 }
 
+#: per-class SLO attainment objectives — the error-budget denominators of
+#: the burn-rate evaluator (repro.core.telemetry): burn = miss_fraction /
+#: (1 - objective).  Batch tolerates a wider budget: it is the class the
+#: gateway sheds first under overload.
+DEFAULT_SLO_OBJECTIVES = {
+    "interactive": 0.99,
+    "standard": 0.99,
+    "batch": 0.95,
+}
+
 
 @dataclass(frozen=True)
 class ServiceConfig:
@@ -248,6 +258,29 @@ class ServiceConfig:
     trace_sample_rate: float = 1.0
     tenant_trace_sample_rates: dict = field(default_factory=dict)
     trace_max_retained: int = 1024
+    # SLO burn-rate telemetry (repro.core.telemetry): rollup store +
+    # multi-window multi-burn-rate alert evaluator over per-class SLO
+    # attainment.  Each severity pair is (short_window_s, long_window_s)
+    # + the burn factor both windows must exceed to fire (Google SRE
+    # workbook ch. 5 defaults scaled to the simulation's minutes-long
+    # runs); burn_min_events suppresses alerts on tiny samples.  The
+    # evaluator is fed by the tracer, so it goes dark when
+    # tracing_enabled is off.
+    telemetry_enabled: bool = True
+    slo_objectives: dict = field(
+        default_factory=lambda: dict(DEFAULT_SLO_OBJECTIVES))
+    burn_fast_window: tuple = (30.0, 120.0)
+    burn_fast_factor: float = 14.4
+    burn_slow_window: tuple = (120.0, 600.0)
+    burn_slow_factor: float = 6.0
+    burn_min_events: int = 8
+    # per-class admission shedding while a fast-burn alert fires: the
+    # gateway answers 461 (+ projected-recovery retry_after) for batch
+    # first, escalating one class per shed_escalate_after seconds of
+    # sustained firing; interactive is never shed.  Default OFF — it is
+    # a policy decision, not an observability feature.
+    slo_shed_enabled: bool = False
+    shed_escalate_after: float = 60.0
 
 
 @dataclass(frozen=True)

@@ -97,6 +97,25 @@ DECODE_QUEUE_SCALE_UP = AlertRule(
     op="gt", threshold=5.0, for_duration=30.0, delta=+1, cooldown=60.0,
     pool="decode")
 
+# SLO burn-rate scale-up (repro.core.telemetry, docs/observability.md):
+# scales on *attainment itself* instead of a queue-depth proxy —
+# `slo_burn_fast` is the worst per-class fast-pair burn (the min of the
+# short/long windows, so a transient spike the long window has not
+# confirmed does not scale).  burn > 1 sustained means the error budget
+# is burning faster than the objective allows even if no queue metric
+# looks alarming yet (e.g. a straggler chip blowing TTFT at shallow
+# queues).  ``pool="burning"`` is a sentinel the evaluator resolves at
+# fire time through `Autoscaler.pool_hint`: the webhook patch targets
+# whichever pool's span histogram is actually burning (decode-span burn
+# -> decode pool, prefill-span burn -> prefill pool, queue burn -> the
+# deployment's plain replica count).  Not in the default rule set:
+# deployments opt in via `ModelDeploymentSpec.alert_rules` (or the
+# ControlPlane's alert_rules argument).
+SLO_BURN_SCALE_UP = AlertRule(
+    name="slo_burn_fast>1_for_20s", metric="slo_burn_fast", op="gt",
+    threshold=1.0, for_duration=20.0, delta=+1, cooldown=60.0,
+    pool="burning")
+
 
 class Autoscaler:
     """Evaluates alert rules over the scrape history and fires the Grafana
@@ -116,6 +135,11 @@ class Autoscaler:
         # or None to fall back to the global `rules` (injected by the
         # ControlPlane, which resolves ModelDeploymentSpec.alert_rules)
         self.rules_for = None
+        # fn(config_id) -> "prefill" | "decode" | None: resolves the
+        # ``pool="burning"`` sentinel of SLO_BURN_SCALE_UP at fire time
+        # to the pool whose span histogram the firing burn alert blames
+        # (injected by the ControlPlane from the TelemetryStore)
+        self.pool_hint = None
         # (config_id, rule name) -> breach start time
         self._pending: dict[tuple, float] = {}
         self._last_fired: dict[tuple, float] = {}
@@ -156,7 +180,14 @@ class Autoscaler:
                 self._last_fired[key] = now
                 self._pending.pop(key, None)
                 self.fired.append((now, cfg_id, rule.name))
+                pool = rule.pool
+                if pool == "burning":
+                    # late binding on purpose: the burning pool is a
+                    # property of the INCIDENT (which span family is
+                    # accumulating time), not of the rule
+                    pool = self.pool_hint(cfg_id) \
+                        if self.pool_hint is not None else None
                 self.gw.grafana_webhook({"config_id": cfg_id,
                                          "delta": rule.delta,
                                          "rule": rule.name,
-                                         "pool": rule.pool})
+                                         "pool": pool})

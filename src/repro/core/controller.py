@@ -25,6 +25,7 @@ from repro.core.services import (EndpointGateway, EndpointWorker, JobWorker,
                                  SlurmSubmit)
 from repro.core.simclock import EventLoop, TracingEventLoop
 from repro.core.slurm import SimNode, SimSlurm
+from repro.core.telemetry import TelemetryStore
 from repro.core.tenancy import TenancyManager, TenantSpec
 from repro.core.tracing import Tracer
 from repro.core.web_gateway import WebGateway
@@ -100,18 +101,27 @@ class ControlPlane:
         # trees, the scrape folds per-span-kind histograms (knobs live on
         # ServiceConfig — tracing_enabled, sample rates, retention bound)
         self.tracer = Tracer(self.spec.services)
+        # SLO burn-rate telemetry: fed per-request by the tracer (so it
+        # goes dark when tracing is off), evaluated by the scrape, read
+        # by the gateway's class shedding and SLO_BURN_SCALE_UP
+        svc = self.spec.services
+        self.telemetry = TelemetryStore(svc) \
+            if svc.telemetry_enabled and svc.tracing_enabled else None
+        self.tracer.telemetry = self.telemetry
         self.web_gateway = WebGateway(
             self.db, self.loop, self.registry,
             services=self.spec.services,
             load_fn=self.metrics_gateway.endpoint_load,
             prior_fn=self.roofline_prior,
             service_estimator=self.estimate_service_time,
-            tenancy=self.tenancy, tracer=self.tracer)
+            tenancy=self.tenancy, tracer=self.tracer,
+            telemetry=self.telemetry)
         self._cost_cache: dict[str, object] = {}
         # queued gateway demand feeds the scrape; fresh endpoints drain it
         self.metrics_gateway.attach_web_gateway(self.web_gateway)
         self.metrics_gateway.tenancy = self.tenancy
         self.metrics_gateway.tracer = self.tracer
+        self.metrics_gateway.telemetry = self.telemetry
         self.endpoint_worker.on_ready = self.web_gateway.notify_ready
         # declarative layer: ModelDeployment specs reconciled on the loop;
         # the Job Worker is its executor, the autoscaler its spec patcher
@@ -125,6 +135,7 @@ class ControlPlane:
         # prometheus_labels / alert_rules) resolved through the reconciler
         self.metrics_gateway.deployment_labels = self._deployment_labels
         self.autoscaler.rules_for = self._alert_rules_for
+        self.autoscaler.pool_hint = self._burning_pool
         # cluster-wide shared KV store tier, one per model: every replica's
         # TieredKVStore writes through to it, so a prefix demoted on one
         # instance is promotable on another (hierarchical KV, paper §KV)
@@ -181,6 +192,24 @@ class ControlPlane:
         if dep is None or dep.spec.alert_rules is None:
             return None
         return [rule_from_dict(r) for r in dep.spec.alert_rules]
+
+    def _burning_pool(self, config_id) -> Optional[str]:
+        """Resolve SLO_BURN_SCALE_UP's ``pool="burning"`` sentinel: the
+        pool the model's firing burn alert blames, or None (= plain
+        replica count) for unified deployments — a decode-pool patch on
+        a deployment with no pools would be a misdirected write."""
+        if self.telemetry is None:
+            return None
+        cfg = self.db["ai_model_configurations"].get(config_id)
+        if cfg is None:
+            return None
+        pool = self.telemetry.burning_pool(cfg["model_name"])
+        if pool is None:
+            return None
+        dep = self.reconciler.deployments.get(cfg["model_name"])
+        if dep is None or dep.spec.disaggregation is None:
+            return None
+        return pool
 
     def _tier_store_for(self, model_name: str):
         """Build one engine's lower KV tiers from the deployment's

@@ -46,6 +46,7 @@ from repro.core.disagg import DisaggProfile, DisaggregationSpec
 from repro.core.kvstore import KVStoreSpec
 from repro.core.router import POLICIES, endpoint_key
 from repro.core.simclock import EventLoop
+from repro.core.telemetry import metric_error as _metric_error
 from repro.core.slurm import JobState, SimSlurm
 
 # condition types (k8s Deployment-style)
@@ -203,6 +204,12 @@ class ModelDeploymentSpec:
             _fail(f"{param}.name", "name must be a non-empty string")
         if not isinstance(r["metric"], str) or not r["metric"]:
             _fail(f"{param}.metric", "metric must be a non-empty string")
+        # the metric must be a DECLARED series (telemetry.METRIC_REGISTRY):
+        # a typo'd key or unknown span kind is a rule that silently never
+        # fires — an autoscaler outage, surfaced here as a 422 instead
+        metric_err = _metric_error(r["metric"])
+        if metric_err is not None:
+            _fail(f"{param}.metric", metric_err)
         if r["op"] not in ("gt", "lt"):
             _fail(f"{param}.op", f"op {r['op']!r} must be 'gt' or 'lt'")
         _check_number(r["threshold"], f"{param}.threshold")
@@ -211,9 +218,11 @@ class ModelDeploymentSpec:
         _check_int(r["delta"], f"{param}.delta")
         if "cooldown" in r:
             _check_number(r["cooldown"], f"{param}.cooldown", minimum=0.0)
-        if r.get("pool") not in (None, "prefill", "decode"):
+        if r.get("pool") not in (None, "prefill", "decode", "burning"):
             _fail(f"{param}.pool",
-                  f"pool {r['pool']!r} must be 'prefill', 'decode' or null")
+                  f"pool {r['pool']!r} must be 'prefill', 'decode', "
+                  f"'burning' (resolved at fire time to the pool the burn "
+                  f"alert blames) or null")
 
     def template(self) -> tuple:
         """The replica template: fields whose change requires replacing

@@ -13,6 +13,7 @@ from collections import defaultdict, deque
 from dataclasses import dataclass
 from typing import Optional
 
+from repro.config import SLO_CLASSES
 from repro.core.db import Database
 from repro.core.simclock import EventLoop
 
@@ -38,6 +39,7 @@ class MetricsGateway:
         self.web_gateway = None               # set via attach_web_gateway
         self.tenancy = None                   # TenancyManager (ControlPlane)
         self.tracer = None                    # repro.core.tracing.Tracer
+        self.telemetry = None                 # telemetry.TelemetryStore
         # Reconciler.patch_replicas, set by the ControlPlane: for configs
         # managed declaratively the webhook patches the deployment SPEC
         # (clamped to its min/max window) instead of mutating the DB row
@@ -204,6 +206,25 @@ class MetricsGateway:
                 # window's SLO-miss count and exemplar trace ids, drained
                 # from the tracer's pending samples for this model
                 agg.update(self.tracer.fold(cfg["model_name"]))
+            if self.telemetry is not None:
+                # SLO burn-rate series (repro.core.telemetry): the scrape
+                # drives one evaluation pass on the virtual clock and
+                # stores the resulting series.  Keys are spelled out as
+                # literal stores (not a dict merge) so repro-lint R4/R6
+                # can statically tie AlertRule metrics and the metric
+                # registry to real emission sites.
+                tele = self.telemetry.fold(cfg["model_name"], now)
+                agg["slo_burn_fast"] = tele["slo_burn_fast"]
+                agg["slo_burn_slow"] = tele["slo_burn_slow"]
+                agg["slo_burn_firing"] = tele["slo_burn_firing"]
+                agg["slo_shed_total"] = tele["slo_shed_total"]
+                for cls in SLO_CLASSES:
+                    agg[f"slo_burn_fast_{cls}"] = \
+                        tele[f"slo_burn_fast_{cls}"]
+                    agg[f"slo_burn_slow_{cls}"] = \
+                        tele[f"slo_burn_slow_{cls}"]
+                    agg[f"slo_attainment_{cls}"] = \
+                        tele[f"slo_attainment_{cls}"]
             self._append_sample(self.history[cfg["id"]], now, agg)
         # per-tenant series: in-flight, queued depth and running usage
         # totals per tenant — what a per-department Grafana board plots

@@ -263,6 +263,12 @@ class Tracer:
         self._miss_counts: dict[str, int] = {}
         self._exemplars: dict[str, list] = {}
         self._watchers: list[Callable] = []
+        # repro.core.telemetry.TelemetryStore (set by the ControlPlane;
+        # None = burn-rate telemetry off): `finish` feeds it one
+        # attainment observation per completed request, synchronously —
+        # the telemetry feed inherits this tracer's zero-scheduling
+        # determinism guarantee
+        self.telemetry = None
 
     # -- lifecycle (WebGateway) --------------------------------------------
     def begin(self, req, now: float) -> Optional[RequestTrace]:
@@ -332,6 +338,12 @@ class Tracer:
             ex = self._exemplars.setdefault(model, [])
             if len(ex) < _MAX_EXEMPLARS:
                 ex.append(tr.trace_id)
+        if self.telemetry is not None:
+            # one attainment observation per request (shed requests are
+            # filtered inside — they must not feed the alert that shed
+            # them); non-shed errors burn budget like SLO misses
+            self.telemetry.observe(model, req.slo_class, tr, slo_miss,
+                                   error=err is not None, t=end)
         if head or err is not None or slo_miss:
             self.traces[tr.trace_id] = tr
             self.retained_total += 1

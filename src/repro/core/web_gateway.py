@@ -74,6 +74,7 @@ class GatewayStats:
     rejected_no_endpoint: int = 0
     rejected_admission: int = 0   # est. service time > queue TTL (461)
     rejected_quota: int = 0       # tenant bucket / inflight cap (429)
+    rejected_shed: int = 0        # burn-alert class shedding (461)
     forwarded: int = 0
     handoffs: int = 0             # prefill->decode hops orchestrated
     disagg_retries: int = 0       # transparent re-runs after instance loss
@@ -89,7 +90,7 @@ class WebGateway:
                  load_fn: Optional[Callable[[tuple], dict]] = None,
                  prior_fn: Optional[Callable] = None,
                  service_estimator: Optional[Callable] = None,
-                 tenancy=None, tracer=None):
+                 tenancy=None, tracer=None, telemetry=None):
         self.db = db
         self.loop = loop
         self.registry = registry                  # (node, port) -> instance
@@ -105,6 +106,10 @@ class WebGateway:
         # repro.core.tracing.Tracer (None = tracing off): stamps every
         # request with a span tree; recording never touches the EventLoop
         self.tracer = tracer
+        # repro.core.telemetry.TelemetryStore (None = burn telemetry
+        # off): while a fast-burn SLO alert fires, `api_handle` sheds
+        # lower classes before higher ones (slo_shed_enabled gates it)
+        self.telemetry = telemetry
         # api_key -> (tenant row | None, expiry); bounded LRU.  Negative
         # lookups cache too (short TTL) — a client retry-looping a bad key
         # must not buy a full auth_db_trip per attempt
@@ -326,6 +331,30 @@ class WebGateway:
                 model_name=model_name):
             return self._reject(MODEL_UNKNOWN, stream,
                                 error_for_status(MODEL_UNKNOWN))
+
+        # per-class burn shedding BEFORE quota admission (a shed request
+        # must not burn the tenant's token budget): while a fast-burn SLO
+        # alert fires for this model, lower classes are rejected 461 with
+        # the alert's projected recovery as the retry hint — batch first,
+        # escalating to standard, never interactive (docs/observability.md)
+        if self.telemetry is not None and self.services.slo_shed_enabled:
+            shed_after = self.telemetry.should_shed(
+                model_name, req.slo_class, now)
+            if shed_after is not None:
+                self.stats.rejected_shed += 1
+                self.telemetry.note_shed(model_name, req.slo_class, now)
+                if tr is not None:
+                    # mark the trace so the telemetry feed skips it — a
+                    # shed-induced "miss" must not sustain the very
+                    # alert that shed it
+                    tr.annotate(shed=True)
+                return self._reject(MODEL_NOT_READY, stream,
+                                    error_for_status(
+                                        MODEL_NOT_READY,
+                                        retry_after=shed_after,
+                                        message=f"Shedding {req.slo_class}"
+                                        f" load: a fast-burn SLO alert is "
+                                        f"firing for {model_name!r}."))
 
         # quota admission AFTER model validation: a typo'd model name must
         # answer 460 without burning the tenant's token budget

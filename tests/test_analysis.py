@@ -301,6 +301,76 @@ def test_r4_golden_table_drift(mini_root, tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# R6 metric-registry checks (activate only when core/telemetry.py
+# declares a parsable METRIC_REGISTRY — the bare mini tree above stays
+# clean without one, see test_r4_clean_mini_tree)
+# ---------------------------------------------------------------------------
+
+def _add_registry(mini_root, extra: str = ""):
+    (mini_root / "core" / "telemetry.py").write_text(
+        "METRIC_REGISTRY = {\n"
+        "    'queue_depth': {'type': 'gauge', 'labels': ('model',)},\n"
+        "    'gpu_util': {'type': 'gauge', 'labels': ('model',)},\n"
+        "    'slo_burn_fast_{cls}': {'type': 'gauge',\n"
+        "                            'labels': ('model', 'cls')},\n"
+        + extra + "}\n")
+
+
+def test_r6_clean_when_every_emission_is_registered(mini_root):
+    _add_registry(mini_root)
+    assert crosscheck(mini_root) == []
+
+
+def test_r6_typod_emission_is_flagged(mini_root):
+    _add_registry(mini_root)
+    p = mini_root / "core" / "metrics_gateway.py"
+    p.write_text(p.read_text().replace("agg['gpu_util']",
+                                       "agg['gpu_utll']"))
+    findings = crosscheck(mini_root)
+    assert [f.rule for f in findings] == ["R6"]
+    assert "gpu_utll" in findings[0].message
+    assert "METRIC_REGISTRY" in findings[0].message
+
+
+def test_r6_fstring_emissions_expand_over_slo_classes(mini_root):
+    _add_registry(mini_root)
+    p = mini_root / "core" / "metrics_gateway.py"
+    p.write_text(p.read_text() +
+                 "def fold(agg, tele, cls):\n"
+                 "    agg[f'slo_burn_fast_{cls}'] = tele[0]\n")
+    assert crosscheck(mini_root) == []       # template covers every class
+    p.write_text(p.read_text().replace("slo_burn_fast_{cls}'] = tele[0]",
+                                       "slo_burn_fats_{cls}'] = tele[0]"))
+    findings = crosscheck(mini_root)
+    # one finding per expanded class name, all at the typo'd store
+    assert {f.rule for f in findings} == {"R6"}
+    assert all("slo_burn_fats_" in f.message for f in findings)
+    assert len(findings) == 3
+
+
+def test_r6_registry_entry_needs_a_valid_type(mini_root):
+    _add_registry(mini_root,
+                  "    'bad_series': {'type': 'countr'},\n")
+    findings = crosscheck(mini_root)
+    assert [f.rule for f in findings] == ["R6"]
+    assert "bad_series" in findings[0].message and \
+        "'type'" in findings[0].message
+
+
+def test_r6_telemetry_fold_emissions_are_checked_too(mini_root):
+    _add_registry(mini_root)
+    p = mini_root / "core" / "telemetry.py"
+    p.write_text(p.read_text() +
+                 "def fold(model):\n"
+                 "    out = {}\n"
+                 "    out['slo_brun_total'] = 0\n"
+                 "    return out\n")
+    findings = crosscheck(mini_root)
+    assert [f.rule for f in findings] == ["R6"]
+    assert "slo_brun_total" in findings[0].message
+
+
+# ---------------------------------------------------------------------------
 # CLI + the real tree (the blocking CI invocation)
 # ---------------------------------------------------------------------------
 
